@@ -1,0 +1,201 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``name,us_per_call,derived`` CSV rows (plus table-formatted sections).
+Tables:
+  table1_wrapper   — paper Tables I–III analog: PE cost without/with the NoC
+                     wrapper (bytes + flit framing overhead).
+  table4_bmvm_iter — paper Table IV analog: BMVM speedup vs iterations r
+                     (software oracle vs kernel datapath), n=64 k=8 f=2, 4 PEs.
+  table5_topology  — paper Table V analog: BMVM time vs topology
+                     (ring/mesh/torus/fattree), measured round-by-round
+                     schedule simulation + analytic alpha-beta model at the
+                     paper's 64-PE scale.
+  fig_ldpc         — LDPC decoder throughput (vectorized+kernel) + NoC stats.
+  fig_pf           — particle-filter tracking throughput + accuracy.
+  lm_step          — LM-stack microbench: smoke-arch train-step wall time.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _timeit(fn, n=5, warmup=2):
+    for _ in range(warmup):
+        fn()
+    t0 = time.monotonic()
+    for _ in range(n):
+        fn()
+    return (time.monotonic() - t0) / n * 1e6  # us
+
+
+def table1_wrapper(fast: bool) -> list[str]:
+    from repro.apps.ldpc import build_ldpc_graph, fano_plane_H
+    from repro.apps.particle_filter import PFConfig, build_pf_graph
+    from repro.core import NoCConfig, wrapper_overhead
+
+    rows = []
+    g, _ = build_ldpc_graph(fano_plane_H())
+    for r in wrapper_overhead(g, NoCConfig())[:2]:
+        rows.append(f"table1_ldpc_{r['pe']},0,"
+                    f"wo={r['wo_wrapper_bytes']}B with={r['with_wrapper_bytes']}B "
+                    f"overhead={r['overhead']}")
+    gpf = build_pf_graph(PFConfig(n_particles=64), 4)
+    for r in wrapper_overhead(gpf, NoCConfig())[:2]:
+        rows.append(f"table3_pf_{r['pe']},0,"
+                    f"wo={r['wo_wrapper_bytes']}B with={r['with_wrapper_bytes']}B "
+                    f"overhead={r['overhead']}")
+    return rows
+
+
+def table4_bmvm_iter(fast: bool) -> list[str]:
+    from repro.apps import bmvm
+
+    rng = np.random.default_rng(0)
+    cfg = bmvm.BMVMConfig(n=64, k=8, fold=2)
+    A = rng.integers(0, 2, (64, 64)).astype(np.uint8)
+    V = rng.integers(0, 2, (4, 64)).astype(np.uint8)   # 4 "PEs"/threads analog
+    lut = bmvm.preprocess(A, cfg)
+    Vj = jnp.asarray(V)
+    # correctness of the Pallas kernel datapath (interpret mode = validation;
+    # its wall time is meaningless on CPU, so the timed "hardware" path is the
+    # XLA-jitted LUT datapath that the kernel implements)
+    assert np.array_equal(np.asarray(bmvm.iterate_kernel(lut, Vj, cfg, 3)),
+                          bmvm.software_ref(A, V, 3))
+    rows = []
+    iters = [1, 10, 100] if fast else [1, 10, 100, 1000]
+    for r in iters:
+        t_sw = _timeit(lambda: bmvm.software_ref(A, V, r), n=3)
+        it = jax.jit(lambda v: bmvm.iterate_kernel(lut, v, cfg, r, use_kernel=False))
+        it(Vj)  # compile
+        t_hw = _timeit(lambda: jax.block_until_ready(it(Vj)), n=3)
+        rows.append(f"table4_bmvm_r{r},{t_hw:.1f},speedup_vs_sw={t_sw / t_hw:.2f}")
+    return rows
+
+
+def table5_topology(fast: bool) -> list[str]:
+    from repro.apps import bmvm
+    from repro.core import compare
+
+    n, k, f = (256, 4, 4) if fast else (1024, 4, 4)    # paper: n=1024 k=4 f=4
+    rng = np.random.default_rng(1)
+    cfg = bmvm.BMVMConfig(n=n, k=k, fold=f)
+    A = rng.integers(0, 2, (n, n)).astype(np.uint8)
+    v = rng.integers(0, 2, (n,)).astype(np.uint8)
+    lut = np.asarray(bmvm.preprocess(A, cfg))
+    rows = []
+    r = 2
+    sw = bmvm.software_ref(A, v[None], r)
+    for topo in ("ring", "mesh", "torus", "fattree"):
+        t0 = time.monotonic()
+        out, stats = bmvm.iterate_noc_sim(jnp.asarray(lut), v, cfg, r, topology=topo)
+        dt = (time.monotonic() - t0) * 1e6
+        assert np.array_equal(out.reshape(1, -1), sw), topo
+        rows.append(f"table5_bmvm_{topo},{dt:.0f},"
+                    f"rounds={stats.rounds} link_bytes={stats.link_bytes} "
+                    f"flits={stats.flits}")
+    # analytic alpha-beta model at the paper's 64-PE scale
+    for row in compare(64, chunk_bytes=2 * (n // k // f)):
+        rows.append(f"table5_model_{row['topology']},{row['model_time_us']:.2f},"
+                    f"rounds={row['rounds']} avg_hops={row['avg_hops']}")
+    return rows
+
+
+def fig_ldpc(fast: bool) -> list[str]:
+    from repro.apps import ldpc
+
+    rng = np.random.default_rng(2)
+    H = ldpc.pg_ldpc_H(copies=4 if fast else 16)
+    idx = ldpc.build_edge_index(H)
+    B = 16
+    llr = jnp.asarray(np.stack([
+        ldpc.awgn_llr(np.zeros(H.shape[1], np.int8), 3.0, rng) for _ in range(B)]))
+    dec = jax.jit(lambda l: ldpc.decode_minsum(idx, l, 10)[0])
+    dec(llr)
+    t = _timeit(lambda: jax.block_until_ready(dec(llr)), n=5)
+    thpt = B * H.shape[1] / (t / 1e6)
+    rows = [f"fig_ldpc_decode,{t:.1f},bits_per_s={thpt:,.0f} N={H.shape[1]} iters=10"]
+    _, _, stats = ldpc.decode_on_noc(ldpc.fano_plane_H(),
+                                     ldpc.awgn_llr(np.zeros(7, np.int8), 3.0, rng), 10)
+    rows.append(f"fig_ldpc_noc,0,rounds={stats.rounds} flits={stats.flits} "
+                f"link_bytes={stats.link_bytes}")
+    return rows
+
+
+def fig_pf(fast: bool) -> list[str]:
+    from repro.apps import particle_filter as pf
+
+    rng = np.random.default_rng(3)
+    cfg = pf.PFConfig(img=64, roi=16, n_particles=64, n_bins=16)
+    frames, truth = pf.synth_video(cfg, 6 if fast else 12, rng)
+    t0 = time.monotonic()
+    est = pf.track(frames, cfg)
+    dt = (time.monotonic() - t0) / (frames.shape[0] - 1) * 1e6
+    err = float(np.linalg.norm(est - truth, axis=1).mean())
+    return [f"fig_pf_track,{dt:.0f},px_err={err:.2f} fps={1e6 / dt:.1f}"]
+
+
+def lm_step(fast: bool) -> list[str]:
+    from repro.configs import get_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import make_train_step
+    from repro.models import transformer as T
+    from repro.models.layers import init_params
+    from repro.optim import AdamWConfig, adamw_init
+
+    rows = []
+    mesh = make_host_mesh()
+    archs = ["llama3.2-1b", "qwen3-moe-235b-a22b"] if fast else [
+        "llama3.2-1b", "qwen3-moe-235b-a22b", "jamba-v0.1-52b", "xlstm-350m"]
+    rng = np.random.default_rng(4)
+    for arch in archs:
+        cfg = get_config(arch, smoke=True)
+        params = init_params(T.abstract_params(cfg), jax.random.key(0))
+        state = {"params": params, "opt": adamw_init(params)}
+        B, S = 4, 64
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+                 "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.zeros((B, cfg.enc_seq, cfg.d_frontend), jnp.float32)
+        with jax.set_mesh(mesh):
+            step = jax.jit(make_train_step(cfg, mesh, AdamWConfig()))
+            state, _ = step(state, batch)  # compile
+            t = _timeit(lambda: jax.block_until_ready(step(state, batch)[1]["loss"]), n=3)
+        rows.append(f"lm_train_{arch},{t:.0f},tok_per_s={B * S / (t / 1e6):,.0f}")
+    return rows
+
+
+TABLES = {
+    "table1_wrapper": table1_wrapper,
+    "table4_bmvm_iter": table4_bmvm_iter,
+    "table5_topology": table5_topology,
+    "fig_ldpc": fig_ldpc,
+    "fig_pf": fig_pf,
+    "lm_step": lm_step,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, fn in TABLES.items():
+        if args.only and args.only != name:
+            continue
+        t0 = time.monotonic()
+        for row in fn(args.fast):
+            print(row)
+        print(f"# {name} done in {time.monotonic() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

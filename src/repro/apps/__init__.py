@@ -1,0 +1,2 @@
+"""The paper's three case studies, built on core + kernels."""
+from . import bmvm, ldpc, particle_filter

@@ -1,0 +1,13 @@
+"""Assigned architecture configs (public-literature parameterizations).
+
+Importing this package registers every arch in base.REGISTRY (full config)
+and base.SMOKE_REGISTRY (reduced same-family config for CPU smoke tests).
+"""
+from .base import (REGISTRY, SHAPES, SMOKE_REGISTRY, ModelConfig, ShapeConfig,
+                   cell_supported, get_config, input_specs, long_context_ok, register)
+
+from . import (whisper_large_v3, xlstm_350m, qwen3_moe_235b_a22b, phi35_moe_42b,
+               jamba_v01_52b, minicpm3_4b, llama32_1b, gemma_7b, command_r_35b,
+               internvl2_1b)
+
+ALL_ARCHS = tuple(sorted(REGISTRY))

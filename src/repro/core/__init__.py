@@ -1,0 +1,23 @@
+"""Core library: the paper's contribution as composable JAX modules.
+
+graph      — phase-1 message-passing application model (PEs, channels)
+topology   — CONNECT-analog virtual topologies (ring/mesh/torus/fat-tree)
+routing    — topology schedules as shard_map collectives + numpy simulator
+serdes     — quasi-SERDES cut-link endpoints (framing + compression)
+partition  — phase-2 placement, pod cutting, sharding rules, cross-pod sync
+noc        — the executor + flit accounting (Tables I–V analogs)
+"""
+from .graph import PE, Channel, GraphError, Port, TaskGraph
+from .noc import NoCConfig, NoCExecutor, NoCStats, wrapper_overhead
+from .partition import (DEFAULT_RULES, PartitionPlan, constrain, cross_pod_mean, cut,
+                        logical_to_spec, named_sharding, place_greedy,
+                        place_round_robin, placement_cost)
+from .routing import (all_to_all_for, crossbar_all_to_all, grid_all_to_all,
+                      line_all_to_all, ring_all_to_all_unidir, simulate_schedule,
+                      topology_axes, transpose_oracle)
+from .serdes import (LinkMeta, QuasiSerdesConfig, compression_ratio, decode, encode,
+                     link_bytes_on_wire, plan, send_over_link)
+from .topology import (FatTree, Mesh2D, Ring, Topology, Torus2D, compare,
+                       make_topology)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

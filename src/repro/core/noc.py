@@ -1,0 +1,199 @@
+"""NoC executor: run a TaskGraph over a Topology, optionally cut across pods.
+
+This is the integration point of the framework (paper Fig. 1): PEs from
+phase-1 (`core.graph`) are placed on a CONNECT-style topology
+(`core.topology`), messages move via the topology's routing schedule
+(`core.routing`), and cut links go through quasi-SERDES endpoints
+(`core.serdes` via `core.partition`).
+
+Execution modes
+---------------
+* ``direct``  — `TaskGraph.run`; the pure-software oracle (the paper's
+  "multithreaded message passing software version").
+* ``sim``     — fires PEs wave-by-wave and physically moves every message
+  round-by-round through the topology schedule (numpy).  Produces the
+  NoCStats used by the Table-IV/V-style benchmarks, and — by construction —
+  bit-identical outputs to ``direct`` (tested).
+
+Flit accounting mirrors CONNECT's link model (default flit_data_width=16,
+the paper's BMVM NoC config) and powers the Tables I–III "with/without
+wrapper" overhead analogs: on TPU the wrapper cost is not LUTs/registers but
+the padding + framing + buffer bytes the NoC abstraction adds around the raw
+message payload.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional
+
+import numpy as np
+
+from . import serdes as qserdes
+from .graph import TaskGraph
+from .partition import PartitionPlan
+from .routing import ScheduleStats, simulate_schedule
+from .topology import Topology
+
+
+@dataclasses.dataclass
+class NoCStats:
+    waves: int = 0
+    rounds: int = 0
+    link_bytes: int = 0
+    payload_bytes: int = 0
+    flits: int = 0
+    cross_pod_msgs: int = 0
+    cross_pod_wire_bytes: int = 0
+    cross_pod_beats: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class NoCConfig:
+    """CONNECT "Network and Router Options" analog (paper §VI-B)."""
+
+    flit_data_width: int = 16          # bits
+    flit_buffer_depth: int = 8         # capacity factor analog for MoE dispatch
+    serdes: qserdes.QuasiSerdesConfig = qserdes.QuasiSerdesConfig()
+
+    def flits_for(self, nbytes: int) -> int:
+        per = self.flit_data_width // 8
+        return -(-nbytes // per)
+
+
+def wrapper_overhead(graph: TaskGraph, cfg: NoCConfig = NoCConfig()) -> list[dict]:
+    """Tables I–III analog: per-PE cost without vs with the NoC wrapper.
+
+    'wo_wrapper_bytes'  — the PE's raw argument/result bytes (the bare module);
+    'fifo_bytes'        — Data Collector/Distributor FIFO storage;
+    'flit_bytes'        — framed on-link size incl. padding to flit width;
+    'overhead'          — (with - without) / without, the Table-I ratio.
+    """
+    rows = []
+    for pe in graph.pes.values():
+        in_b = sum(p.nbytes for p in pe.inputs)
+        out_b = sum(p.nbytes for p in pe.outputs)
+        raw = in_b + out_b
+        fifo = cfg.flit_buffer_depth * cfg.flit_data_width // 8 * (len(pe.inputs) + len(pe.outputs))
+        flit_b = sum(cfg.flits_for(p.nbytes) * cfg.flit_data_width // 8
+                     for p in list(pe.inputs) + list(pe.outputs))
+        rows.append(dict(pe=pe.name, wo_wrapper_bytes=raw, fifo_bytes=fifo,
+                         flit_bytes=flit_b, with_wrapper_bytes=flit_b + fifo,
+                         overhead=round((flit_b + fifo - raw) / max(raw, 1), 3)))
+    return rows
+
+
+class NoCExecutor:
+    def __init__(self, graph: TaskGraph, topo: Topology,
+                 placement: Optional[Mapping[str, int]] = None,
+                 plan: Optional[PartitionPlan] = None,
+                 cfg: NoCConfig = NoCConfig()):
+        from .partition import place_round_robin
+
+        self.graph = graph
+        self.topo = topo
+        self.placement = dict(placement or (plan.placement if plan else place_round_robin(graph, topo)))
+        self.plan = plan
+        self.cfg = cfg
+        graph.validate()
+        self._order = graph.firing_order()
+        # group PEs into waves by dataflow depth
+        depth: dict[str, int] = {}
+        preds: dict[str, set[str]] = {n: set() for n in graph.pes}
+        for c in graph.channels:
+            if c.src_pe != c.dst_pe:
+                preds[c.dst_pe].add(c.src_pe)
+        for n in self._order:
+            depth[n] = 1 + max((depth[p] for p in preds[n]), default=-1)
+        self.waves: list[list[str]] = []
+        for n in self._order:
+            while len(self.waves) <= depth[n]:
+                self.waves.append([])
+            self.waves[depth[n]].append(n)
+
+    # ------------------------------------------------------------------
+    def run(self, inputs: Mapping[str, Any], mode: str = "sim") -> tuple[dict[str, Any], NoCStats]:
+        if mode == "direct":
+            return self.graph.run(inputs), NoCStats()
+        assert mode == "sim"
+        g, topo, cfg = self.graph, self.topo, self.cfg
+        stats = NoCStats()
+        mailbox: dict[tuple[str, str], Any] = {}
+        for k, v in inputs.items():
+            pe, port = k.split(".")
+            mailbox[(pe, port)] = np.asarray(v)
+
+        chan_by_src: dict[str, list] = {n: [] for n in g.pes}
+        for c in g.channels:
+            chan_by_src[c.src_pe].append(c)
+
+        pod_of = None
+        if self.plan is not None:
+            pod_of = self.plan.pod_of_node
+
+        for wave in self.waves:
+            stats.waves += 1
+            # fire
+            outbox: list[tuple[Any, int, int, str, str]] = []  # (val, src_node, dst_node, dst_pe, dst_port)
+            for name in wave:
+                pe = g.pes[name]
+                kwargs = {p.name: mailbox[(name, p.name)] for p in pe.inputs}
+                results = pe.fn(**kwargs)
+                for p in pe.outputs:
+                    mailbox[(name, p.name)] = np.asarray(results[p.name])
+                for c in chan_by_src[name]:
+                    val = np.asarray(results[c.src_port])
+                    outbox.append((val, self.placement[c.src_pe], self.placement[c.dst_pe],
+                                   c.dst_pe, c.dst_port))
+            if not outbox:
+                continue
+            # frame messages into per-(src,dst) flit buffers and route them
+            n = topo.n_nodes
+            per_pair: dict[tuple[int, int], list] = {}
+            for val, s, d, dpe, dport in outbox:
+                per_pair.setdefault((s, d), []).append((val, dpe, dport))
+                stats.payload_bytes += val.nbytes
+                stats.flits += cfg.flits_for(val.nbytes)
+                if pod_of is not None and pod_of[s] != pod_of[d]:
+                    stats.cross_pod_msgs += 1
+                    stats.cross_pod_wire_bytes += qserdes.link_bytes_on_wire(
+                        val.shape, val.dtype, cfg.serdes)
+                    stats.cross_pod_beats += cfg.serdes.lanes
+            flit_w = cfg.flit_data_width // 8
+            buf_bytes = max(
+                (sum(cfg.flits_for(v.nbytes) * flit_w for v, _, _ in msgs)
+                 for msgs in per_pair.values()), default=0)
+            if buf_bytes:
+                msgs_arr = np.zeros((n, n, buf_bytes), np.uint8)
+                for (s, d), msgs in per_pair.items():
+                    off = 0
+                    for v, _, _ in msgs:
+                        raw = v.tobytes()
+                        msgs_arr[s, d, off:off + len(raw)] = np.frombuffer(raw, np.uint8)
+                        off += cfg.flits_for(v.nbytes) * flit_w  # flit padding
+                delivered, sstats = simulate_schedule(topo, msgs_arr)
+                stats.rounds += sstats.rounds
+                stats.link_bytes += sstats.link_bytes
+                for (s, d), msgs in per_pair.items():
+                    off = 0
+                    for v, dpe, dport in msgs:
+                        raw = delivered[d, s, off:off + v.nbytes].tobytes()
+                        mailbox[(dpe, dport)] = np.frombuffer(raw, v.dtype).reshape(v.shape).copy()
+                        off += cfg.flits_for(v.nbytes) * flit_w
+        outs = {f"{pe}.{port.name}": mailbox[(pe, port.name)] for pe, port in g.graph_outputs()}
+        return outs, stats
+
+    def run_iterative(self, inputs: Mapping[str, Any], feedback, n_iters: int,
+                      mode: str = "sim") -> tuple[dict[str, Any], NoCStats]:
+        state = dict(inputs)
+        total = NoCStats()
+        outs: dict[str, Any] = {}
+        for _ in range(n_iters):
+            outs, st = self.run(state, mode=mode)
+            for f in dataclasses.fields(NoCStats):
+                setattr(total, f.name, getattr(total, f.name) + getattr(st, f.name))
+            for src, dst in feedback:
+                state[dst] = outs[src]
+        return outs, total

@@ -1,0 +1,268 @@
+"""Phase-2 of the paper: partitioning the NoC across chips (here: pods).
+
+Three layers, mirroring §III:
+
+1. **Placement** — map TaskGraph PEs onto topology nodes (the paper does this
+   manually; we provide round-robin and a greedy traffic-aware placer).
+2. **Cutting** — given a node→pod assignment, classify every channel as
+   intra-pod (stays an on-chip NoC link) or cross-pod (gets a pair of
+   quasi-SERDES endpoints stitched in, `core.serdes`).  The executor consumes
+   this; the application is oblivious ("seamless" per the paper).
+3. **Mesh sharding rules** — the LM-framework generalization: logical array
+   axes → mesh axes (MaxText-style), plus the cross-pod collective that
+   replaces XLA's flat all-reduce with a hierarchical, optionally
+   serdes-compressed exchange over the cut.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import serdes as qserdes
+from .graph import Channel, TaskGraph
+from .topology import Topology
+
+
+# ---------------------------------------------------------------------------
+# 1. placement
+# ---------------------------------------------------------------------------
+
+def place_round_robin(graph: TaskGraph, topo: Topology) -> dict[str, int]:
+    names = list(graph.pes)
+    return {n: i % topo.n_nodes for i, n in enumerate(names)}
+
+
+def place_greedy(graph: TaskGraph, topo: Topology) -> dict[str, int]:
+    """Traffic-aware: place heavy-talking PE pairs on low-hop node pairs.
+
+    Classic greedy: order PE pairs by traffic desc; for each, put the unplaced
+    endpoint on the free node closest to the placed one.
+    """
+    traffic = graph.traffic_bytes()
+    pairs = sorted(traffic.items(), key=lambda kv: -kv[1])
+    placement: dict[str, int] = {}
+    free = set(range(topo.n_nodes))
+
+    def nearest_free(anchor: int) -> int:
+        if not free:
+            # more PEs than nodes: fall back to min-load node
+            loads: dict[int, int] = {}
+            for v in placement.values():
+                loads[v] = loads.get(v, 0) + 1
+            return min(range(topo.n_nodes), key=lambda n: loads.get(n, 0))
+        return min(free, key=lambda n: topo.hops(anchor, n))
+
+    for (a, b), _ in pairs:
+        if a not in placement and b not in placement:
+            na = min(free) if free else 0
+            placement[a] = na
+            free.discard(na)
+            nb = nearest_free(na)
+            placement[b] = nb
+            free.discard(nb)
+        elif a in placement and b not in placement:
+            nb = nearest_free(placement[a])
+            placement[b] = nb
+            free.discard(nb)
+        elif b in placement and a not in placement:
+            na = nearest_free(placement[b])
+            placement[a] = na
+            free.discard(na)
+    for n in graph.pes:  # isolated PEs
+        if n not in placement:
+            node = min(free) if free else 0
+            placement[n] = node
+            free.discard(node)
+    return placement
+
+
+def placement_cost(graph: TaskGraph, topo: Topology, placement: Mapping[str, int]) -> int:
+    """Σ traffic_bytes × hops — the objective the greedy placer reduces."""
+    return sum(
+        b * topo.hops(placement[a], placement[c])
+        for (a, c), b in graph.traffic_bytes().items()
+    )
+
+
+# ---------------------------------------------------------------------------
+# 2. cutting across pods
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PartitionPlan:
+    """Result of cutting a placed graph across pods (paper Fig. 5)."""
+
+    placement: Mapping[str, int]          # PE -> node
+    pod_of_node: tuple[int, ...]          # node -> pod
+    intra: tuple[Channel, ...]
+    cross: tuple[Channel, ...]            # channels that get serdes endpoints
+    serdes_cfg: qserdes.QuasiSerdesConfig = qserdes.QuasiSerdesConfig()
+
+    @property
+    def n_pods(self) -> int:
+        return max(self.pod_of_node) + 1 if self.pod_of_node else 1
+
+    def cut_bytes(self, graph: TaskGraph) -> int:
+        return sum(graph.pes[c.src_pe].out_port(c.src_port).nbytes for c in self.cross)
+
+    def wire_bytes(self, graph: TaskGraph) -> int:
+        """Bytes on the narrow inter-pod wire after serdes framing/compression."""
+        return sum(
+            qserdes.link_bytes_on_wire(
+                graph.pes[c.src_pe].out_port(c.src_port).shape,
+                graph.pes[c.src_pe].out_port(c.src_port).dtype,
+                self.serdes_cfg,
+            )
+            for c in self.cross
+        )
+
+
+def cut(graph: TaskGraph, placement: Mapping[str, int], pod_of_node: Sequence[int],
+        serdes_cfg: qserdes.QuasiSerdesConfig = qserdes.QuasiSerdesConfig()) -> PartitionPlan:
+    intra, cross = [], []
+    for c in graph.channels:
+        same = pod_of_node[placement[c.src_pe]] == pod_of_node[placement[c.dst_pe]]
+        (intra if same else cross).append(c)
+    return PartitionPlan(dict(placement), tuple(pod_of_node), tuple(intra), tuple(cross), serdes_cfg)
+
+
+# ---------------------------------------------------------------------------
+# 3. LM-framework sharding rules + cross-pod collectives
+# ---------------------------------------------------------------------------
+
+# Logical axis vocabulary used by every model in src/repro/models.
+DEFAULT_RULES: dict[str, Optional[str | tuple[str, ...]]] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_kv_shard": "data",      # long-context KV/state sequence sharding
+    "head_dim_shard": "data",    # long-context KV head_dim sharding (decode:
+                                 #   DUS stays shard-local; QK psums over data)
+    "embed": None,               # d_model stays replicated-per-shard (activations)
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "conv": None,
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "layers": None,              # scanned-stack leading axis
+}
+
+
+import contextlib
+
+
+@contextlib.contextmanager
+def rules_override(**kv):
+    """Temporarily rewrite DEFAULT_RULES entries (e.g. no_tp: model axes off).
+    Used by the hillclimb to evaluate sharding-profile changes per cell."""
+    saved = {k: DEFAULT_RULES.get(k) for k in kv}
+    DEFAULT_RULES.update(kv)
+    try:
+        yield
+    finally:
+        DEFAULT_RULES.update(saved)
+
+
+NO_TP = dict(vocab=None, heads=None, kv_heads=None, mlp=None, experts=None,
+             ssm_inner=None, batch=("pod", "data", "model"))
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], rules: Mapping[str, Any] = DEFAULT_RULES,
+                    mesh_axes: Optional[Sequence[str]] = None,
+                    dims: Optional[Sequence[int]] = None,
+                    mesh_shape: Optional[Mapping[str, int]] = None) -> P:
+    """('batch','seq','embed') -> PartitionSpec(('pod','data'), None, None).
+
+    Drops mesh axes absent from the current mesh (single-pod drops 'pod'),
+    and — when ``dims``/``mesh_shape`` are given — axes whose product does not
+    divide the array dimension (e.g. 8 KV heads on a model=16 axis fall back
+    to replication rather than failing)."""
+    parts = []
+    for i, a in enumerate(axes):
+        m = rules.get(a) if a is not None else None
+        if m is None:
+            parts.append(None)
+            continue
+        ms = (m,) if isinstance(m, str) else tuple(m)
+        if mesh_axes is not None:
+            ms = tuple(x for x in ms if x in mesh_axes)
+        if dims is not None and mesh_shape is not None and ms:
+            keep, prod = [], 1
+            for x in ms:
+                nx = mesh_shape.get(x, 1)
+                if dims[i] % (prod * nx) == 0:
+                    keep.append(x)
+                    prod *= nx
+            ms = tuple(keep)
+        parts.append(ms[0] if len(ms) == 1 else (ms if ms else None))
+    return P(*parts)
+
+
+def named_sharding(mesh: Mesh, axes: Sequence[Optional[str]],
+                   rules: Mapping[str, Any] = DEFAULT_RULES) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(axes, rules, mesh.axis_names))
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]],
+              rules: Mapping[str, Any] = DEFAULT_RULES) -> jax.Array:
+    """with_sharding_constraint by logical axes (no-op outside jit/mesh);
+    shape-aware: unshardable dims stay replicated."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return x
+        spec = logical_to_spec(axes, rules, mesh.axis_names, dims=x.shape,
+                               mesh_shape=dict(mesh.shape))
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+# -- cross-pod gradient exchange (the "cut link" of the LM framework) --------
+
+def cross_pod_mean(tree, axis: str = "pod", cfg: Optional[qserdes.QuasiSerdesConfig] = None,
+                   residuals=None, n_pods: int = 2, serialized: bool = True):
+    """Average a pytree over the pod axis *inside shard_map*.
+
+    cfg=None      → plain ``lax.pmean`` (XLA flat collective; baseline).
+    cfg given     → paper-faithful: each pod serializes its contribution
+                    through quasi-SERDES endpoints over the cut links
+                    (ring exchange over pods), with optional compression and
+                    error-feedback residuals.
+    Returns (tree, new_residuals).
+    """
+    if cfg is None:
+        return jax.tree.map(lambda g: lax.pmean(g, axis), tree), residuals
+
+    perm = [(i, (i + 1) % n_pods) for i in range(n_pods)]
+
+    def sync_leaf(g, res):
+        acc = g
+        send = g
+        r = res
+        for _ in range(n_pods - 1):
+            recv, r = qserdes.send_over_link(send, axis, perm, cfg, residual=r,
+                                             serialized=serialized)
+            acc = acc + recv
+            send = recv  # forward the neighbor's contribution around the ring
+        return acc / n_pods, r
+
+    leaves, treedef = jax.tree.flatten(tree)
+    res_leaves = (jax.tree.flatten(residuals)[0] if residuals is not None
+                  else [None] * len(leaves))
+    out, new_res = [], []
+    for g, r in zip(leaves, res_leaves):
+        o, nr = sync_leaf(g, r)
+        out.append(o)
+        new_res.append(nr if nr is not None else jnp.zeros_like(g, jnp.float32)
+                       if cfg.compress == "int8" else 0.0)
+    return jax.tree.unflatten(treedef, out), jax.tree.unflatten(treedef, new_res)

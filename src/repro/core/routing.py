@@ -1,0 +1,234 @@
+"""Routing schedules: execute a Topology's all-to-all as JAX collectives.
+
+The paper's CONNECT routers move flits hop by hop at runtime.  On TPU the
+equivalent is a *static* schedule of neighbor exchanges compiled into the
+program: every round is one ``lax.ppermute`` (= one ICI hop for every node in
+parallel); the fat-tree/crossbar case is a single fused ``lax.all_to_all``.
+
+All functions here run *inside* ``jax.shard_map`` and operate on the
+per-device view: ``x`` has shape ``(n, *chunk)`` where ``x[d]`` is the message
+this node addresses to node ``d``.  They return ``(n, *chunk)`` where
+``out[s]`` is the message received from node ``s``.  The semantics of every
+variant is exactly the device transpose (``transpose_oracle``) — property
+tested in tests/test_routing*.py.
+
+A pure-numpy round-by-round simulator (``simulate_schedule``) executes the
+same schedules without devices; benchmarks use it so that measured time scales
+with rounds x bytes like the paper's Table V.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .topology import FatTree, Mesh2D, Ring, Topology, Torus2D
+
+
+# ---------------------------------------------------------------------------
+# shard_map collectives (per-device view)
+# ---------------------------------------------------------------------------
+
+def transpose_oracle(x: jax.Array, axis_name: str) -> jax.Array:
+    """Reference semantics: fused all_to_all (what the schedules must equal)."""
+    return lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0)
+
+
+def _fwd_perm(n: int, wrap: bool) -> list[tuple[int, int]]:
+    return [(s, (s + 1) % n) for s in range(n) if wrap or s + 1 < n]
+
+
+def _bwd_perm(n: int, wrap: bool) -> list[tuple[int, int]]:
+    return [(s, (s - 1) % n) for s in range(n) if wrap or s - 1 >= 0]
+
+
+def _put(out: jax.Array, src, val: jax.Array, valid) -> jax.Array:
+    """out[src] = val where valid (dynamic index, masked)."""
+    src_c = jnp.clip(src, 0, out.shape[0] - 1)
+    cur = lax.dynamic_index_in_dim(out, src_c, 0, keepdims=False)
+    new = jnp.where(valid, val, cur)
+    return lax.dynamic_update_index_in_dim(out, new, src_c, 0)
+
+
+def ring_all_to_all_unidir(x: jax.Array, axis_name: str) -> jax.Array:
+    """Paper-faithful unidirectional ring rotation: n-1 rounds."""
+    n = lax.axis_size(axis_name)
+    i = lax.axis_index(axis_name)
+    me = lax.dynamic_index_in_dim(x, i, 0, keepdims=False)
+    out = _put(jnp.zeros_like(x), i, me, True)
+    buf = x
+    for t in range(1, n):
+        buf = lax.ppermute(buf, axis_name, _fwd_perm(n, wrap=True))
+        # after t forward rotations this node holds node (i-t)'s buffer;
+        # extract the message it addressed to us.
+        val = lax.dynamic_index_in_dim(buf, i, 0, keepdims=False)
+        out = _put(out, (i - t) % n, val, True)
+    return out
+
+
+def line_all_to_all(x: jax.Array, axis_name: str, wrap: bool) -> jax.Array:
+    """Bidirectional 1D exchange.  wrap=True → torus ring (⌈n/2⌉-ish rounds,
+    both directions concurrently); wrap=False → mesh line (n-1 rounds)."""
+    n = lax.axis_size(axis_name)
+    i = lax.axis_index(axis_name)
+    me = lax.dynamic_index_in_dim(x, i, 0, keepdims=False)
+    out = _put(jnp.zeros_like(x), i, me, True)
+    if n == 1:
+        return out
+    fwd_steps = n // 2 if wrap else n - 1
+    bwd_steps = (n - 1) // 2 if wrap else n - 1
+    fbuf, bbuf = x, x
+    for t in range(1, max(fwd_steps, bwd_steps) + 1):
+        if t <= fwd_steps:
+            fbuf = lax.ppermute(fbuf, axis_name, _fwd_perm(n, wrap))
+            src = (i - t) % n if wrap else i - t
+            val = lax.dynamic_index_in_dim(fbuf, i, 0, keepdims=False)
+            out = _put(out, src, val, True if wrap else src >= 0)
+        if t <= bwd_steps:
+            bbuf = lax.ppermute(bbuf, axis_name, _bwd_perm(n, wrap))
+            src = (i + t) % n if wrap else i + t
+            val = lax.dynamic_index_in_dim(bbuf, i, 0, keepdims=False)
+            out = _put(out, src, val, True if wrap else src < n)
+    return out
+
+
+def grid_all_to_all(x: jax.Array, axis_x: str, axis_y: str, wrap: bool) -> jax.Array:
+    """Factorized 2D exchange (dimension-ordered routing, like XY routing in
+    the paper's mesh/torus NoCs).  ``x``: (n, *chunk), destination linear index
+    d = dy*rx + dx;  returns source-linear-indexed result."""
+    rx = lax.axis_size(axis_x)
+    ry = lax.axis_size(axis_y)
+    c = x.shape[1:]
+    b = x.reshape(ry, rx, *c)          # (dy, dx, *c)
+    b = jnp.moveaxis(b, 1, 0)          # (dx, dy, *c)
+    b = line_all_to_all(b, axis_x, wrap)   # (sx, dy, *c)
+    b = jnp.moveaxis(b, 1, 0)          # (dy, sx, *c)
+    b = line_all_to_all(b, axis_y, wrap)   # (sy, sx, *c)
+    return b.reshape(ry * rx, *c)      # source linear index sy*rx + sx
+
+
+def crossbar_all_to_all(x: jax.Array, axis_name: str) -> jax.Array:
+    """Fat-tree / ideal crossbar: single fused all_to_all."""
+    return lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0)
+
+
+def topology_axes(topo: Topology) -> tuple[tuple[str, int], ...]:
+    """Mesh axes a topology's schedule needs (NoC executor builds this mesh)."""
+    if isinstance(topo, (Torus2D, Mesh2D)):
+        return (("noc_y", topo.ry), ("noc_x", topo.rx))
+    return (("noc", topo.n_nodes),)
+
+
+def all_to_all_for(topo: Topology):
+    """Return fn(x) usable inside shard_map over ``topology_axes(topo)``."""
+    if isinstance(topo, Ring):
+        return lambda x: ring_all_to_all_unidir(x, "noc")
+    if isinstance(topo, Torus2D):  # subclass of Mesh2D — check first
+        return lambda x: grid_all_to_all(x, "noc_x", "noc_y", wrap=True)
+    if isinstance(topo, Mesh2D):
+        return lambda x: grid_all_to_all(x, "noc_x", "noc_y", wrap=False)
+    if isinstance(topo, FatTree):
+        return lambda x: crossbar_all_to_all(x, "noc")
+    raise TypeError(f"no schedule for {type(topo).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# numpy schedule simulator (no devices; benchmark + oracle for tests)
+# ---------------------------------------------------------------------------
+
+class ScheduleStats:
+    def __init__(self):
+        self.rounds = 0
+        self.link_bytes = 0
+
+    def __repr__(self):
+        return f"ScheduleStats(rounds={self.rounds}, link_bytes={self.link_bytes})"
+
+
+def _sim_line(buf: np.ndarray, wrap: bool, stats: ScheduleStats) -> np.ndarray:
+    """buf: (n_nodes, n_dst_axis, *c) per-node buffers; returns (n, n_src, *c).
+
+    Executes the same forward/backward rotation schedule round by round,
+    physically moving buffers (so wall time ∝ rounds × bytes)."""
+    n = buf.shape[0]
+    out = np.zeros_like(buf)
+    for i in range(n):
+        out[i, i] = buf[i, i]
+    if n == 1:
+        return out
+    fwd_steps = n // 2 if wrap else n - 1
+    bwd_steps = (n - 1) // 2 if wrap else n - 1
+    fbuf, bbuf = buf.copy(), buf.copy()
+    for t in range(1, max(fwd_steps, bwd_steps) + 1):
+        stats.rounds += 1
+        if t <= fwd_steps:
+            fbuf = np.roll(fbuf, 1, axis=0)
+            if not wrap:
+                fbuf[0] = 0
+            stats.link_bytes += fbuf.nbytes - (fbuf.nbytes // n if not wrap else 0)
+            for i in range(n):
+                src = (i - t) % n if wrap else i - t
+                if 0 <= src < n:
+                    out[i, src] = fbuf[i, i]
+        if t <= bwd_steps:
+            bbuf = np.roll(bbuf, -1, axis=0)
+            if not wrap:
+                bbuf[-1] = 0
+            stats.link_bytes += bbuf.nbytes - (bbuf.nbytes // n if not wrap else 0)
+            for i in range(n):
+                src = (i + t) % n if wrap else i + t
+                if 0 <= src < n:
+                    out[i, src] = bbuf[i, i]
+    return out
+
+
+def _sim_ring_unidir(buf: np.ndarray, stats: ScheduleStats) -> np.ndarray:
+    n = buf.shape[0]
+    out = np.zeros_like(buf)
+    for i in range(n):
+        out[i, i] = buf[i, i]
+    fbuf = buf.copy()
+    for t in range(1, n):
+        stats.rounds += 1
+        fbuf = np.roll(fbuf, 1, axis=0)
+        stats.link_bytes += fbuf.nbytes
+        for i in range(n):
+            out[i, (i - t) % n] = fbuf[i, i]
+    return out
+
+
+def simulate_schedule(topo: Topology, msgs: np.ndarray) -> tuple[np.ndarray, ScheduleStats]:
+    """msgs: (n_src, n_dst, *c).  Returns (delivered (n_dst, n_src, *c), stats).
+
+    Semantics oracle: delivered == msgs.swapaxes(0, 1)."""
+    n = topo.n_nodes
+    assert msgs.shape[0] == n and msgs.shape[1] == n
+    stats = ScheduleStats()
+    if isinstance(topo, FatTree):
+        stats.rounds = 1
+        stats.link_bytes = int(msgs.nbytes * (n - 1) / n)
+        return msgs.swapaxes(0, 1).copy(), stats
+    if isinstance(topo, Ring):
+        return _sim_ring_unidir(msgs, stats), stats
+    if isinstance(topo, (Torus2D, Mesh2D)):
+        wrap = isinstance(topo, Torus2D)
+        rx, ry = topo.rx, topo.ry
+        c = msgs.shape[2:]
+        cflat = int(np.prod(c, dtype=np.int64)) if c else 1
+        # node linear index = y*rx + x; XY dimension-ordered routing.
+        m = msgs.reshape(ry, rx, ry, rx, *c)            # [sy, sx, dy, dx, *c]
+        # Phase X: every row executes the line schedule concurrently — fold all
+        # non-(sx,dx) indices into the payload so one _sim_line call = one
+        # parallel phase (stats counted once, bytes include all rows' links).
+        b = np.moveaxis(m, (1, 3), (0, 1))              # [sx, dx, sy, dy, *c]
+        b = _sim_line(np.ascontiguousarray(b).reshape(rx, rx, -1), wrap, stats)
+        b = b.reshape(rx, rx, ry, ry, *c)               # [dx(node), sx, sy, dy, *c]
+        # Phase Y: every column concurrently, keyed by dy.
+        b = np.moveaxis(b, (2, 3), (0, 1))              # [sy, dy, dx, sx, *c]
+        b = _sim_line(np.ascontiguousarray(b).reshape(ry, ry, -1), wrap, stats)
+        b = b.reshape(ry, ry, rx, rx, *c)               # [dy(node), sy, dx, sx, *c]
+        out = np.moveaxis(b, (0, 2, 1, 3), (0, 1, 2, 3))  # [dy, dx, sy, sx, *c]
+        return np.ascontiguousarray(out).reshape(n, n, *c), stats
+    raise TypeError(f"no simulator for {type(topo).__name__}")

@@ -1,0 +1,197 @@
+"""Quasi-SERDES link endpoints (paper §III, Fig. 6) — TPU adaptation.
+
+On the FPGAs, an NoC link cut by the chip partition is replaced by a pair of
+endpoints that serialize each flit over a handful of GPIO pins ("8 bits at a
+time, MSB first") and reconstruct it on the far side.  The TPU analog of a
+pin-starved link is the cross-pod DCN hop (~an order of magnitude slower than
+ICI), so the endpoint here does what narrow links demand:
+
+  * framing   — messages are packed into fixed-width flit words (+pad), and
+                optionally transferred in ``n_lanes`` serialized chunks
+                (paper-faithful serialization) or one shot (optimized);
+  * narrowing — optional lossy compression (bf16 cast, or int8 block
+                quantization with error feedback) so fewer "pins" carry the
+                same message — the distributed-optimization payoff.
+
+``encode``/``decode`` are exact inverses for mode="none"/"bf16" (up to the
+bf16 rounding applied once), and quantization error is bounded and killed over
+steps by error feedback for mode="int8" (property tests in
+tests/test_serdes.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclasses.dataclass(frozen=True)
+class QuasiSerdesConfig:
+    """wire_bits: width of the physical flit word put on the link per beat.
+    lanes: number of serialized beats a message is split into (1 = one shot).
+    compress: 'none' | 'bf16' | 'int8'.
+    block: quantization block size for int8 (per-block scale)."""
+
+    wire_bits: int = 16
+    lanes: int = 8
+    compress: str = "none"
+    block: int = 256
+
+    def __post_init__(self):
+        assert self.wire_bits in (8, 16, 32)
+        assert self.compress in ("none", "bf16", "int8")
+        assert self.lanes >= 1
+
+
+@dataclasses.dataclass
+class LinkMeta:
+    """Static metadata both endpoints agree on a priori (the paper requires
+    storage requirements known a priori — same deal)."""
+
+    shape: tuple[int, ...]
+    dtype: Any
+    n_words: int  # payload words of wire_bits each, incl. padding
+    n_scale_words: int = 0
+
+
+def _wire_dtype(bits: int):
+    return {8: jnp.uint8, 16: jnp.uint16, 32: jnp.uint32}[bits]
+
+
+def _pad_to(x: jax.Array, multiple: int) -> jax.Array:
+    pad = (-x.shape[0]) % multiple
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+    return x
+
+
+def plan(shape: tuple[int, ...], dtype, cfg: QuasiSerdesConfig) -> LinkMeta:
+    """Compute the static framing plan for a message contract."""
+    n = int(math.prod(shape)) if shape else 1
+    wire_bytes = cfg.wire_bits // 8
+    if cfg.compress == "none":
+        payload = n * jnp.dtype(dtype).itemsize
+        scale_words = 0
+    elif cfg.compress == "bf16":
+        payload = n * 2
+        scale_words = 0
+    else:  # int8
+        payload = n
+        n_blocks = -(-n // cfg.block)
+        scale_words = -(-n_blocks * 4 // wire_bytes)  # f32 scale per block
+    n_words = -(-payload // wire_bytes)
+    # pad words so they split evenly into lanes
+    n_words = -(-n_words // cfg.lanes) * cfg.lanes
+    scale_words = -(-scale_words // cfg.lanes) * cfg.lanes if scale_words else 0
+    return LinkMeta(tuple(shape), jnp.dtype(dtype), n_words, scale_words)
+
+
+def _bitcast_to_words(x: jax.Array, bits: int) -> jax.Array:
+    wd = _wire_dtype(bits)
+    flat = x.reshape(-1)
+    b = lax.bitcast_convert_type(flat, jnp.uint8).reshape(-1)
+    b = _pad_to(b, bits // 8)
+    return lax.bitcast_convert_type(b.reshape(-1, bits // 8), wd).reshape(-1)
+
+
+def _words_to_bitcast(w: jax.Array, shape, dtype, bits: int) -> jax.Array:
+    nbytes = int(math.prod(shape)) * jnp.dtype(dtype).itemsize
+    b = lax.bitcast_convert_type(w, jnp.uint8).reshape(-1)[:nbytes]
+    item = jnp.dtype(dtype).itemsize
+    return lax.bitcast_convert_type(b.reshape(-1, item), dtype).reshape(shape)
+
+
+def encode(x: jax.Array, cfg: QuasiSerdesConfig, meta: LinkMeta,
+           residual: Optional[jax.Array] = None):
+    """→ (words[(lanes, n_words//lanes)], scale_words, new_residual).
+
+    residual: error-feedback accumulator (int8 mode); pass the previous step's
+    value, keep the returned one.
+    """
+    wd = _wire_dtype(cfg.wire_bits)
+    scale_words = jnp.zeros((max(cfg.lanes, 1), max(meta.n_scale_words // max(cfg.lanes, 1), 0)), wd) \
+        if meta.n_scale_words else jnp.zeros((cfg.lanes, 0), wd)
+    new_residual = residual
+    if cfg.compress == "none":
+        words = _bitcast_to_words(x, cfg.wire_bits)
+    elif cfg.compress == "bf16":
+        words = _bitcast_to_words(x.astype(jnp.bfloat16), cfg.wire_bits)
+    else:  # int8 block quantization + error feedback
+        flat = x.astype(jnp.float32).reshape(-1)
+        if residual is not None:
+            flat = flat + residual
+        padded = _pad_to(flat, cfg.block).reshape(-1, cfg.block)
+        scale = jnp.max(jnp.abs(padded), axis=1, keepdims=True) / 127.0
+        safe = jnp.where(scale > 0, scale, 1.0)
+        q = jnp.clip(jnp.round(padded / safe), -127, 127).astype(jnp.int8)
+        deq = (q.astype(jnp.float32) * scale).reshape(-1)[: flat.shape[0]]
+        new_residual = flat - deq
+        words = _bitcast_to_words(q.reshape(-1).view(jnp.int8), cfg.wire_bits)
+        sw = _bitcast_to_words(scale.reshape(-1), cfg.wire_bits)
+        sw = _pad_to(sw, max(meta.n_scale_words, cfg.lanes))[: meta.n_scale_words]
+        scale_words = sw.reshape(cfg.lanes, -1)
+    words = _pad_to(words, meta.n_words)[: meta.n_words]
+    return words.reshape(cfg.lanes, -1), scale_words, new_residual
+
+
+def decode(words: jax.Array, scale_words: jax.Array, cfg: QuasiSerdesConfig,
+           meta: LinkMeta) -> jax.Array:
+    n = int(math.prod(meta.shape)) if meta.shape else 1
+    flat_words = words.reshape(-1)
+    if cfg.compress == "none":
+        return _words_to_bitcast(flat_words, meta.shape, meta.dtype, cfg.wire_bits)
+    if cfg.compress == "bf16":
+        nbytes = n * 2
+        b = lax.bitcast_convert_type(flat_words, jnp.uint8).reshape(-1)[:nbytes]
+        bf = lax.bitcast_convert_type(b.reshape(-1, 2), jnp.bfloat16).reshape(meta.shape)
+        return bf.astype(meta.dtype)
+    # int8: first n bytes are the real quantized payload; re-pad to whole blocks
+    b = lax.bitcast_convert_type(flat_words, jnp.uint8).reshape(-1)[:n]
+    b = _pad_to(b, cfg.block)
+    q = lax.bitcast_convert_type(b.reshape(-1, 1), jnp.int8).reshape(-1, cfg.block)
+    sb = lax.bitcast_convert_type(scale_words.reshape(-1), jnp.uint8).reshape(-1)
+    n_blocks = q.shape[0]
+    scale = lax.bitcast_convert_type(sb[: n_blocks * 4].reshape(-1, 4), jnp.float32).reshape(-1, 1)
+    deq = (q.astype(jnp.float32) * scale).reshape(-1)[:n]
+    return deq.reshape(meta.shape).astype(meta.dtype)
+
+
+# ---------------------------------------------------------------------------
+# link transfer (inside shard_map, across the cut axis)
+# ---------------------------------------------------------------------------
+
+def send_over_link(x: jax.Array, axis_name: str, perm: list[tuple[int, int]],
+                   cfg: QuasiSerdesConfig, meta: Optional[LinkMeta] = None,
+                   residual: Optional[jax.Array] = None, serialized: bool = True):
+    """Move ``x`` across the cut (e.g. pod↔pod) through quasi-SERDES endpoints.
+
+    serialized=True sends the ``lanes`` beats as separate ppermutes — the
+    paper-faithful "8 bits at a time" behavior (lets XLA pipeline/overlap each
+    beat with compute); False sends the whole frame at once (optimized).
+    Returns (received, new_residual).
+    """
+    meta = meta or plan(x.shape, x.dtype, cfg)
+    words, scales, new_res = encode(x, cfg, meta, residual)
+    if serialized:
+        beats = [lax.ppermute(words[i], axis_name, perm) for i in range(cfg.lanes)]
+        rwords = jnp.stack(beats)
+    else:
+        rwords = lax.ppermute(words, axis_name, perm)
+    rscales = lax.ppermute(scales, axis_name, perm) if meta.n_scale_words else scales
+    return decode(rwords, rscales, cfg, meta), new_res
+
+
+def link_bytes_on_wire(shape, dtype, cfg: QuasiSerdesConfig) -> int:
+    """Bytes that actually cross the narrow link (roofline collective term)."""
+    meta = plan(tuple(shape), dtype, cfg)
+    return (meta.n_words + meta.n_scale_words) * (cfg.wire_bits // 8)
+
+
+def compression_ratio(shape, dtype, cfg: QuasiSerdesConfig) -> float:
+    raw = int(math.prod(shape)) * jnp.dtype(dtype).itemsize
+    return raw / max(1, link_bytes_on_wire(shape, dtype, cfg))

@@ -1,0 +1,234 @@
+"""Virtual network topologies (CONNECT analog).
+
+The paper generates a packet-switched NoC of a chosen topology (ring, mesh,
+torus, fat-tree — Table V) from CONNECT.  On TPU there is no programmer-visible
+packet switching, so a Topology here compiles to a *static schedule* of
+neighbor exchanges (`core.routing` executes it with ``lax.ppermute`` /
+``lax.all_to_all`` under ``shard_map``) plus an analytic cost model
+(rounds × bytes/round, hop counts) that powers the Table-V-style topology
+comparison and the roofline collective term.
+
+Cost model conventions
+----------------------
+*Round*: one synchronous neighbor-exchange step; every node may send one
+buffer over each of its links (bidirectional links = 2 concurrent transfers).
+For an all-to-all of per-destination chunks of ``c`` bytes over ``n`` nodes:
+
+  ring(n)      rounds = n - 1 (unidirectional rotation; chunks in transit
+               shrink each round)                      link-bytes ≈ c·n(n−1)/2
+  mesh(rx,ry)  factorized line-a2a per dim, bidirectional, no wraparound:
+               rounds = (rx−1) + (ry−1)
+  torus(rx,ry) factorized ring-a2a per dim, bidirectional wraparound:
+               rounds = ⌈rx/2⌉ + ⌈ry/2⌉
+  fat-tree     ideal full-bisection crossbar: 1 round (fused all_to_all)
+
+This reproduces the paper's observed ordering ring < mesh < torus < fat-tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Base class; subclasses define connectivity and schedule cost."""
+
+    n_nodes: int
+
+    @property
+    def name(self) -> str:
+        return type(self).__name__.lower()
+
+    # -- connectivity --------------------------------------------------------
+    def neighbors(self, node: int) -> tuple[int, ...]:
+        raise NotImplementedError
+
+    def hops(self, src: int, dst: int) -> int:
+        raise NotImplementedError
+
+    def avg_hops(self) -> float:
+        n = self.n_nodes
+        tot = sum(self.hops(s, d) for s in range(n) for d in range(n) if s != d)
+        return tot / (n * (n - 1))
+
+    def bisection_links(self) -> int:
+        raise NotImplementedError
+
+    # -- schedule cost -------------------------------------------------------
+    def a2a_rounds(self) -> int:
+        """Neighbor-exchange rounds for a full all-to-all personalized exchange."""
+        raise NotImplementedError
+
+    def a2a_link_bytes(self, chunk_bytes: int) -> int:
+        """Total bytes crossing links for an all-to-all of per-dest chunks."""
+        n = self.n_nodes
+        # sum over (src,dst) pairs of hops(src,dst) * chunk
+        tot = sum(self.hops(s, d) for s in range(n) for d in range(n) if s != d)
+        return tot * chunk_bytes
+
+    def a2a_time_model(self, chunk_bytes: int, link_bw: float, hop_latency: float) -> float:
+        """Simple alpha-beta model: rounds*latency + serialized link traffic."""
+        links = max(1, self.n_links())
+        return self.a2a_rounds() * hop_latency + self.a2a_link_bytes(chunk_bytes) / (links * link_bw)
+
+    def n_links(self) -> int:
+        return sum(len(self.neighbors(i)) for i in range(self.n_nodes)) // 2
+
+    def validate(self) -> None:
+        for i in range(self.n_nodes):
+            for j in self.neighbors(i):
+                assert i in self.neighbors(j), f"asymmetric link {i}->{j}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Ring(Topology):
+    def neighbors(self, node: int) -> tuple[int, ...]:
+        n = self.n_nodes
+        return ((node - 1) % n, (node + 1) % n)
+
+    def hops(self, src: int, dst: int) -> int:
+        n = self.n_nodes
+        d = abs(src - dst)
+        return min(d, n - d)
+
+    def bisection_links(self) -> int:
+        return 2
+
+    def a2a_rounds(self) -> int:
+        # unidirectional systolic rotation (paper-faithful: CONNECT ring routers
+        # forward one direction); n-1 rounds.
+        return self.n_nodes - 1
+
+
+def _factor2d(n: int) -> tuple[int, int]:
+    rx = int(math.sqrt(n))
+    while n % rx:
+        rx -= 1
+    return rx, n // rx
+
+
+@dataclasses.dataclass(frozen=True)
+class Mesh2D(Topology):
+    rx: int = 0
+    ry: int = 0
+
+    def __post_init__(self):
+        if self.rx == 0:
+            rx, ry = _factor2d(self.n_nodes)
+            object.__setattr__(self, "rx", rx)
+            object.__setattr__(self, "ry", ry)
+        assert self.rx * self.ry == self.n_nodes
+
+    def coords(self, node: int) -> tuple[int, int]:
+        return node % self.rx, node // self.rx
+
+    def node(self, x: int, y: int) -> int:
+        return y * self.rx + x
+
+    def neighbors(self, node: int) -> tuple[int, ...]:
+        x, y = self.coords(node)
+        out = []
+        if x > 0:
+            out.append(self.node(x - 1, y))
+        if x < self.rx - 1:
+            out.append(self.node(x + 1, y))
+        if y > 0:
+            out.append(self.node(x, y - 1))
+        if y < self.ry - 1:
+            out.append(self.node(x, y + 1))
+        return tuple(out)
+
+    def hops(self, src: int, dst: int) -> int:
+        sx, sy = self.coords(src)
+        dx, dy = self.coords(dst)
+        return abs(sx - dx) + abs(sy - dy)
+
+    def bisection_links(self) -> int:
+        return min(self.rx, self.ry)
+
+    def a2a_rounds(self) -> int:
+        # dimension-ordered, bidirectional line exchange per dim
+        return (self.rx - 1) + (self.ry - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Torus2D(Mesh2D):
+    def neighbors(self, node: int) -> tuple[int, ...]:
+        x, y = self.coords(node)
+        return tuple(
+            {
+                self.node((x - 1) % self.rx, y),
+                self.node((x + 1) % self.rx, y),
+                self.node(x, (y - 1) % self.ry),
+                self.node(x, (y + 1) % self.ry),
+            }
+            - {node}
+        )
+
+    def hops(self, src: int, dst: int) -> int:
+        sx, sy = self.coords(src)
+        dx, dy = self.coords(dst)
+        hx = min(abs(sx - dx), self.rx - abs(sx - dx))
+        hy = min(abs(sy - dy), self.ry - abs(sy - dy))
+        return hx + hy
+
+    def bisection_links(self) -> int:
+        return 2 * min(self.rx, self.ry)
+
+    def a2a_rounds(self) -> int:
+        return math.ceil(self.rx / 2) + math.ceil(self.ry / 2)
+
+
+@dataclasses.dataclass(frozen=True)
+class FatTree(Topology):
+    """Modeled as an ideal full-bisection crossbar (CONNECT's fat tree at the
+    radix used in the paper); compiles to one fused ``lax.all_to_all``."""
+
+    def neighbors(self, node: int) -> tuple[int, ...]:
+        return tuple(i for i in range(self.n_nodes) if i != node)
+
+    def hops(self, src: int, dst: int) -> int:
+        return 1 if src != dst else 0
+
+    def bisection_links(self) -> int:
+        return self.n_nodes // 2
+
+    def n_links(self) -> int:
+        # full-bisection: n/2 concurrent disjoint paths
+        return self.n_nodes // 2
+
+    def a2a_rounds(self) -> int:
+        return 1
+
+
+TOPOLOGIES = {"ring": Ring, "mesh": Mesh2D, "torus": Torus2D, "fattree": FatTree}
+
+
+def make_topology(name: str, n_nodes: int) -> Topology:
+    try:
+        return TOPOLOGIES[name](n_nodes)
+    except KeyError:
+        raise ValueError(f"unknown topology {name!r}; choose from {sorted(TOPOLOGIES)}")
+
+
+def compare(n_nodes: int, chunk_bytes: int, names: Iterable[str] = ("ring", "mesh", "torus", "fattree"),
+            link_bw: float = 50e9, hop_latency: float = 1e-6) -> list[dict]:
+    """Table-V-style analytic comparison."""
+    rows = []
+    for name in names:
+        t = make_topology(name, n_nodes)
+        rows.append(
+            dict(
+                topology=name,
+                nodes=n_nodes,
+                rounds=t.a2a_rounds(),
+                links=t.n_links(),
+                avg_hops=round(t.avg_hops(), 3),
+                bisection_links=t.bisection_links(),
+                a2a_link_bytes=t.a2a_link_bytes(chunk_bytes),
+                model_time_us=round(t.a2a_time_model(chunk_bytes, link_bw, hop_latency) * 1e6, 3),
+            )
+        )
+    return rows

@@ -1,0 +1,84 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Dispatch policy: kernels are written for TPU (the TARGET); on this CPU
+container they execute through Pallas interpret mode (``interpret=None`` →
+auto: real lowering on TPU, interpret elsewhere).  ``use_kernel=False`` falls
+back to the pure-jnp oracle (the default inside big pjit graphs on CPU, where
+the oracle is what XLA sees for the dry-run).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention_pallas
+from .gf2_bmvm import gf2_bmvm_pallas
+from .histogram import particle_histogram_pallas
+from .minsum import minsum_check_pallas
+
+
+def _interp(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+# -- GF(2) BMVM -------------------------------------------------------------
+
+def gf2_preprocess(a_bits, k):
+    return ref.gf2_preprocess(a_bits, k)
+
+
+def gf2_bmvm(lut, v_words, *, use_kernel: bool = True, interpret=None):
+    if use_kernel:
+        return gf2_bmvm_pallas(lut, v_words, interpret=_interp(interpret))
+    return ref.gf2_bmvm(lut, v_words)
+
+
+# -- LDPC min-sum ------------------------------------------------------------
+
+def minsum_check(u, *, use_kernel: bool = True, interpret=None):
+    if use_kernel:
+        return minsum_check_pallas(u, interpret=_interp(interpret))
+    return ref.minsum_check(u)
+
+
+# -- particle filter ----------------------------------------------------------
+
+def particle_histogram(bins, weights, ref_hist, *, n_bins=None, use_kernel: bool = True,
+                       interpret=None):
+    n_bins = n_bins or ref_hist.shape[-1]
+    if use_kernel:
+        return particle_histogram_pallas(bins, weights, ref_hist, n_bins=n_bins,
+                                         interpret=_interp(interpret))
+    hist = ref.weighted_histogram(bins, weights, n_bins)
+    return hist, ref.bhattacharyya(hist, ref_hist)
+
+
+# -- flash attention -----------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool = True, use_kernel: bool = False,
+                    interpret=None):
+    """Differentiable attention: kernel forward (TPU) / jnp oracle fallback;
+    backward always via the oracle's VJP (recompute strategy)."""
+    if use_kernel:
+        return flash_attention_pallas(q, k, v, causal=causal, interpret=_interp(interpret))
+    return ref.mha(q, k, v, causal=causal)
+
+
+def _fa_fwd(q, k, v, causal, use_kernel, interpret):
+    out = flash_attention(q, k, v, causal, use_kernel, interpret)
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, use_kernel, interpret, resids, g):
+    q, k, v = resids
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref.mha(q_, k_, v_, causal=causal), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)

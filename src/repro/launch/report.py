@@ -1,0 +1,107 @@
+"""Post-process dry-run JSONs into the EXPERIMENTS.md roofline table.
+
+    PYTHONPATH=src python -m repro.launch.report results/dryrun [--md]
+
+Adds the algorithm-ideal terms the raw records can't know:
+  ideal_compute_s = MODEL_FLOPS/chips / peak
+  ideal_memory_s  = MODEL_BYTES/chips / HBM_bw   (params + cache traffic floor)
+  roofline_fraction = max(ideal terms) / achieved step time
+                      (the headline score: 1.0 = at the roofline for what the
+                       algorithm fundamentally must compute/move)
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+import jax
+
+from ..configs import SHAPES, get_config
+from .roofline import HBM_BW, PEAK_FLOPS
+
+
+def cache_bytes(cfg, shape) -> int:
+    from .steps import cache_struct
+    total = 0
+    for leaf in jax.tree.leaves(cache_struct(cfg, shape.global_batch, shape.seq_len)):
+        total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+def model_bytes(cfg, shape) -> float:
+    """Algorithm-minimum HBM traffic per step (global bytes).
+
+    train:   read+write params/m/v in f32 (24 B/param) + bf16 cast reads (2)
+    prefill: param reads (2 B active) + cache writes
+    decode:  param reads (2 B active) + full cache read
+    """
+    n = cfg.param_count()
+    n_act = cfg.active_param_count()
+    if shape.kind == "train":
+        return 24.0 * n + 2.0 * n_act
+    cb = cache_bytes(cfg, shape)
+    if shape.kind == "prefill":
+        return 2.0 * n_act + cb
+    return 2.0 * n_act + cb  # decode: read the whole cache once
+
+
+def enrich(rec: dict) -> dict:
+    cfg = get_config(rec["arch"])
+    if rec["shape"] == "long_500k":
+        cfg = cfg.replace(seq_shard_kv=True)
+    shape = SHAPES[rec["shape"]]
+    n_chips = 512 if rec["mesh"] == "2x16x16" else 256
+    rc = rec.get("roofline_corrected") or {}
+    if rec["status"] != "ok" or "error" in rc:
+        return rec
+    mb = model_bytes(cfg, shape)
+    ideal_c = rc["model_flops_global"] / n_chips / PEAK_FLOPS
+    ideal_m = mb / n_chips / HBM_BW
+    achieved = max(rc["compute_s"], rc["memory_s"], rc["collective_s"])
+    rc["ideal_compute_s"] = ideal_c
+    rc["ideal_memory_s"] = ideal_m
+    rc["model_bytes_global"] = mb
+    rc["roofline_fraction"] = max(ideal_c, ideal_m) / achieved if achieved else 0.0
+    rec["roofline_corrected"] = rc
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("dir")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    rows = []
+    for f in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        rec = enrich(json.load(open(f)))
+        with open(f, "w") as fh:
+            json.dump(rec, fh, indent=1)
+        rows.append(rec)
+    hdr = ("arch", "shape", "mesh", "status", "dom", "compute_s", "memory_s",
+           "collective_s", "ideal_c", "ideal_m", "roofline_frac")
+    if args.md:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+    else:
+        print(",".join(hdr))
+    for r in rows:
+        rc = r.get("roofline_corrected") or {}
+        if r["status"] == "ok" and "error" not in rc:
+            vals = (r["arch"], r["shape"], r["mesh"], "ok", rc["dominant"],
+                    f"{rc['compute_s']:.4f}", f"{rc['memory_s']:.4f}",
+                    f"{rc['collective_s']:.4f}", f"{rc['ideal_compute_s']:.4f}",
+                    f"{rc['ideal_memory_s']:.4f}", f"{rc['roofline_fraction']:.3f}")
+        else:
+            vals = (r["arch"], r["shape"], r["mesh"], r["status"],
+                    str(r.get("reason") or r.get("error", ""))[:60], "", "", "", "", "", "")
+        if args.md:
+            print("| " + " | ".join(vals) + " |")
+        else:
+            print(",".join(vals))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""Roofline-term extraction from a lowered/compiled dry-run artifact.
+
+Three terms per (arch × shape × mesh), in seconds:
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOPs        (197 TFLOP/s bf16, v5e)
+  memory     = HLO_bytes_per_chip / HBM_bw            (819 GB/s)
+  collective = Σ collective_bytes_per_chip / (links·link_bw)   (~50 GB/s/link)
+
+``cost_analysis()`` on an SPMD-partitioned module reports the per-device
+program, so terms are per-chip directly.  Collective bytes are NOT in
+cost_analysis — we parse the post-SPMD HLO text and sum output-shape bytes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(output bytes ≈ bytes put on the wire per chip for AR/AG; a stated,
+consistent convention).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+import numpy as np
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / ICI link
+ICI_LINKS = 4                # usable links/chip on a 2D-torus v5e slice
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# ops that anchor a fusion cluster on TPU — the tensors that actually hit HBM.
+_MEM_ANCHORS = ("dot", "convolution", "reduce", "reduce-window", "scatter",
+                "gather", "dynamic-update-slice", "dynamic-slice", "sort",
+                "concatenate", "cumsum", "iota-nope")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[128,4096]' or tuple '(bf16[...], f32[...])' -> total bytes."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-op-kind output bytes summed over every collective instruction."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["n_ops"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # '%name = TYPE[SHAPE] op-name(...)' — find 'op-name(' after '='
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)", ls)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        for kind in _COLLECTIVES:
+            if op == kind or op.startswith(kind + "-start"):
+                out[kind] += _shape_bytes(shape_str)
+                out["n_ops"] += 1
+                break
+    return out
+
+
+def fusion_aware_bytes(hlo_text: str) -> float:
+    """Approximate post-fusion HBM traffic: 2× output bytes of every anchor
+    op (read+write of the materialized tensor) + parameter reads once.
+    Rationale: on TPU, elementwise chains fuse into their anchor (dot/reduce/
+    slice/…); raw cost_analysis 'bytes accessed' counts every unfused
+    elementwise op and overstates traffic ~10-30×.  Stated convention for the
+    roofline memory term (EXPERIMENTS.md §Roofline)."""
+    total = 0.0
+    in_entry = False
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if ls.startswith("ENTRY"):
+            in_entry = True
+        elif ls.startswith("}"):
+            in_entry = False
+        elif (ls.startswith("%") or ls.startswith("fused_") or ls.startswith("wide.")) and ls.endswith("{"):
+            in_entry = False
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)", ls)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        if op == "parameter":
+            if in_entry:  # fusion-body parameters are aliases, not HBM reads
+                total += _shape_bytes(shape_str)
+        elif op in _MEM_ANCHORS or op.startswith("reduce-"):
+            total += 2.0 * _shape_bytes(shape_str)
+    return total
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+    collective_ops: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_global: float
+    useful_flops_frac: float
+    peak_fraction: float          # useful model FLOPs/chip/peak vs dominant term
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled, hlo_text: str, *, n_chips: int, model_flops_global: float,
+            mem_bytes_override: Optional[float] = None) -> Roofline:
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    flops = float(ca.get("flops", 0.0))
+    byts = float(mem_bytes_override if mem_bytes_override is not None
+                 else ca.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    cbytes = float(sum(coll[k] for k in _COLLECTIVES))
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = cbytes / (ICI_LINKS * LINK_BW)
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    useful = model_flops_global / n_chips / max(flops, 1.0)
+    step_time = max(compute_s, memory_s, collective_s)
+    ideal = (model_flops_global / n_chips) / PEAK_FLOPS
+    return Roofline(flops, byts, cbytes, int(coll["n_ops"]), compute_s, memory_s,
+                    collective_s, dominant, model_flops_global,
+                    min(useful, 1.0), (ideal / step_time) if step_time > 0 else 0.0)
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N_active·D for train, 2·N_active·D forward-only."""
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def extrapolate(c1: dict, c2: dict, n_periods: int, *, n_chips: int,
+                model_flops_global: float) -> dict:
+    """Affine trip-count correction: cost(P) = c0 + P·Δ from depth-1/2 lowers
+    (inner sequence loops flattened there, so each period is counted exactly).
+    """
+    out = {}
+    full = {}
+    for k in ("flops", "bytes", "coll_bytes"):
+        delta = max(c2[k] - c1[k], 0.0)
+        full[k] = c1[k] + (n_periods - 1) * delta
+    compute_s = full["flops"] / PEAK_FLOPS
+    memory_s = full["bytes"] / HBM_BW
+    collective_s = full["coll_bytes"] / (ICI_LINKS * LINK_BW)
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    step_time = max(terms.values())
+    ideal = (model_flops_global / n_chips) / PEAK_FLOPS
+    out.update(flops_per_chip=full["flops"], bytes_per_chip=full["bytes"],
+               collective_bytes_per_chip=full["coll_bytes"],
+               compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+               dominant=dominant,
+               model_flops_global=model_flops_global,
+               useful_flops_frac=min((model_flops_global / n_chips) / max(full["flops"], 1.0), 1.0),
+               peak_fraction=(ideal / step_time) if step_time > 0 else 0.0)
+    return out

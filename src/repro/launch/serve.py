@@ -1,0 +1,81 @@
+"""Serving driver: batched prefill + decode with a continuous request queue.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \\
+        --requests 16 --batch 4 --prompt-len 32 --gen 16
+
+Implements the batched serving loop the decode shapes lower: requests are
+grouped into fixed-size batches, each batch is prefilled once, then decoded
+token-by-token with a shared ring cache (greedy sampling).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config
+from ..models import transformer as T
+from ..models.layers import init_params
+from .mesh import make_host_mesh
+
+
+def serve_batch(params, cfg, prompts: np.ndarray, gen: int, mesh) -> np.ndarray:
+    B, S = prompts.shape
+    with jax.set_mesh(mesh):
+        cache = T.init_cache(cfg, B, S + gen)
+        batch = {"tokens": jnp.asarray(prompts)}
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.zeros((B, cfg.enc_seq, cfg.d_frontend), cfg.cdtype)
+        if cfg.family == "vlm":
+            batch["patches"] = jnp.zeros((B, cfg.n_patches, cfg.d_frontend), cfg.cdtype)
+        prefill = jax.jit(lambda p, b, c: T.prefill(p, b, cfg, c))
+        decode = jax.jit(lambda p, b, c: T.decode_step(p, b, cfg, c))
+        logits, cache = prefill(params, batch, cache)
+        tok = jnp.argmax(logits[:, -1], -1)
+        out = [np.asarray(tok)]
+        for _ in range(gen - 1):
+            logits, cache = decode(params, {"tokens": tok[:, None]}, cache)
+            tok = jnp.argmax(logits, -1)
+            out.append(np.asarray(tok))
+    return np.stack(out, 1)
+
+
+def run(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    mesh = make_host_mesh(model=args.model_parallel)
+    params = init_params(T.abstract_params(cfg), jax.random.key(args.seed))
+    rng = np.random.default_rng(args.seed)
+
+    t0 = time.monotonic()
+    done = 0
+    all_out = []
+    while done < args.requests:
+        n = min(args.batch, args.requests - done)
+        prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32)
+        out = serve_batch(params, cfg, prompts, args.gen, mesh)
+        all_out.append(out[:n])
+        done += n
+        print(f"served {done}/{args.requests} requests "
+              f"(batch decode tok/s so far: {done * args.gen / (time.monotonic() - t0):,.1f})")
+    dt = time.monotonic() - t0
+    print(f"done: {args.requests} requests × {args.gen} tokens in {dt:.1f}s")
+    return np.concatenate(all_out)
+
+
+if __name__ == "__main__":
+    run()

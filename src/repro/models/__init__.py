@@ -1,0 +1,4 @@
+"""Model zoo: config-driven architectures assembled in transformer.py."""
+from . import attention, layers, mla, moe, ssm, transformer, xlstm
+from .transformer import (abstract_params, decode_step, forward, init_cache, loss,
+                          prefill)

@@ -1,0 +1,157 @@
+"""Parameter machinery + basic layers shared by every architecture.
+
+Params are plain nested-dict pytrees.  The single source of truth for shapes,
+dtypes, *and logical sharding axes* is the abstract spec tree built by each
+model's ``abstract_params``: every leaf is a ``ParamSpec``.  From it we derive
+(1) materialized params, (2) PartitionSpecs for pjit, (3) parameter counts —
+so the dry-run, the trainer, and the roofline all agree by construction.
+
+Logical axis names are resolved by ``core.partition.DEFAULT_RULES``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core.partition import DEFAULT_RULES, constrain, logical_to_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]
+    dtype: Any = jnp.float32
+    init: str = "fan_in"        # fan_in | zeros | ones | embed | small
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def spec_tree_map(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def init_param(key: jax.Array, spec: ParamSpec) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "embed":
+        return (jax.random.normal(key, spec.shape) * spec.scale).astype(spec.dtype)
+    if spec.init == "small":
+        return (jax.random.normal(key, spec.shape) * 0.02 * spec.scale).astype(spec.dtype)
+    # fan_in
+    fan_in = spec.shape[0] if len(spec.shape) >= 2 else max(spec.shape[0], 1)
+    if len(spec.shape) >= 3:  # stacked/layered weights: fan-in is the middle dim
+        fan_in = spec.shape[-2]
+    std = spec.scale / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape) * std).astype(spec.dtype)
+
+
+def init_params(spec_tree, key: jax.Array):
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [init_param(k, s) for k, s in zip(keys, leaves)])
+
+
+def param_pspecs(spec_tree, rules: Mapping = DEFAULT_RULES, mesh_axes=None,
+                 mesh_shape=None):
+    return spec_tree_map(
+        lambda s: logical_to_spec(s.axes, rules, mesh_axes, dims=s.shape,
+                                  mesh_shape=mesh_shape), spec_tree)
+
+
+def param_shapes(spec_tree):
+    return spec_tree_map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree)
+
+
+def count_params(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    return sum(int(math.prod(s.shape)) for s in leaves)
+
+
+# ---------------------------------------------------------------------------
+# basic ops
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma + beta
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0,
+         rope_dim: Optional[int] = None) -> jax.Array:
+    """x: (..., S, H, D) or (..., S, D); positions: (..., S)."""
+    d = rope_dim or x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs          # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    while cos.ndim < x.ndim:
+        cos, sin = cos[..., None, :], sin[..., None, :]             # add head axis
+    x1, x2 = x[..., :half], x[..., half:d]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([rot, x[..., d:]], axis=-1).astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array,
+           act: str = "silu") -> jax.Array:
+    g = x @ w_gate
+    u = x @ w_up
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)
+    h = constrain(g * u, ("batch", "seq", "mlp"))
+    return h @ w_down
+
+
+def mlp_specs(d: int, ff: int, dtype, gated: bool = True) -> dict:
+    sp = {
+        "up": ParamSpec((d, ff), ("embed", "mlp"), dtype),
+        "down": ParamSpec((ff, d), ("mlp", "embed"), dtype),
+    }
+    if gated:
+        sp["gate"] = ParamSpec((d, ff), ("embed", "mlp"), dtype)
+    return sp
+
+
+def mlp_apply(params: dict, x, act: str = "silu"):
+    if "gate" in params:
+        return swiglu(x, params["gate"].astype(x.dtype), params["up"].astype(x.dtype),
+                      params["down"].astype(x.dtype), act=act)
+    h = x @ params["up"].astype(x.dtype)
+    h = jax.nn.silu(h) if act == "silu" else jax.nn.gelu(h, approximate=True)
+    h = constrain(h, ("batch", "seq", "mlp"))
+    return h @ params["down"].astype(x.dtype)
+
+
+def stack_specs(spec_tree, n: int):
+    """Prepend a scanned-layers axis to every ParamSpec in the tree."""
+    return spec_tree_map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.dtype, s.init, s.scale),
+        spec_tree)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, ignore_id: int = -1):
+    """logits (B,S,V) possibly vocab-sharded; labels (B,S).  Mean NLL."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

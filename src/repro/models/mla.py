@@ -1,0 +1,138 @@
+"""Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style).
+
+The KV cache stores only the *compressed latent* (kv_lora_rank) plus the
+shared RoPE key — for MiniCPM3 that is 256+32 floats/token vs
+40 heads × 2 × 64 = 5120 for vanilla GQA: a ~18× cut in exactly the traffic
+the paper's quasi-SERDES narrow links carry when the cache is partitioned
+across chips (synergy noted in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.partition import constrain
+from .attention import _blocked, _naive
+from .layers import ParamSpec, rms_norm, rope
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_dim: int = 64
+    qk_rope_dim: int = 32
+    v_dim: int = 64
+    rope_theta: float = 10000.0
+    impl: str = "blocked"
+    bkv: int = 512
+    unroll: bool = False
+    compute_dtype: str = "f32"
+    absorb: bool = False   # beyond-paper: absorbed formulation — attention in
+                           # the compressed latent space, no (T,H,·) expansion
+
+
+def mla_specs(c: MLAConfig, dtype=jnp.float32) -> dict:
+    d, H = c.d_model, c.n_heads
+    return {
+        "q_a": ParamSpec((d, c.q_lora_rank), ("embed", None), dtype),
+        "q_a_norm": ParamSpec((c.q_lora_rank,), (None,), dtype, init="ones"),
+        "q_b": ParamSpec((c.q_lora_rank, H, c.qk_nope_dim + c.qk_rope_dim),
+                         (None, "heads", None), dtype),
+        "kv_a": ParamSpec((d, c.kv_lora_rank + c.qk_rope_dim), ("embed", None), dtype),
+        "kv_a_norm": ParamSpec((c.kv_lora_rank,), (None,), dtype, init="ones"),
+        "kv_b": ParamSpec((c.kv_lora_rank, H, c.qk_nope_dim + c.v_dim),
+                          (None, "heads", None), dtype),
+        "wo": ParamSpec((H, c.v_dim, d), ("heads", None, "embed"), dtype),
+    }
+
+
+def init_mla_cache(c: MLAConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    return {
+        "ckv": jnp.zeros((batch, max_len, c.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, c.qk_rope_dim), dtype),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_apply(params: dict, x: jax.Array, c: MLAConfig, *,
+              positions: Optional[jax.Array] = None,
+              cache: Optional[dict] = None) -> tuple[jax.Array, Optional[dict]]:
+    B, S, d = x.shape
+    H = c.n_heads
+    if positions is None:
+        base = cache["idx"] if cache is not None else 0
+        positions = base + jnp.broadcast_to(jnp.arange(S)[None, :], (B, S)).astype(jnp.int32)
+
+    cq = rms_norm(x @ params["q_a"].astype(x.dtype), params["q_a_norm"].astype(x.dtype))
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["q_b"].astype(x.dtype))
+    q_nope, q_rope = q[..., :c.qk_nope_dim], q[..., c.qk_nope_dim:]
+    q_rope = rope(q_rope, positions, c.rope_theta)
+
+    ckv_full = x @ params["kv_a"].astype(x.dtype)
+    ckv = rms_norm(ckv_full[..., :c.kv_lora_rank], params["kv_a_norm"].astype(x.dtype))
+    k_rope_new = rope(ckv_full[..., c.kv_lora_rank:], positions, c.rope_theta)
+
+    kv_len = None
+    q_off = None
+    new_cache = None
+    if cache is not None:
+        idx = cache["idx"]
+        q_off = idx
+        ckv_all = lax.dynamic_update_slice(cache["ckv"], ckv.astype(cache["ckv"].dtype),
+                                           (0, idx, 0))
+        kr_all = lax.dynamic_update_slice(cache["k_rope"],
+                                          k_rope_new.astype(cache["k_rope"].dtype),
+                                          (0, idx, 0))
+        new_cache = {"ckv": ckv_all, "k_rope": kr_all, "idx": idx + S}
+        ckv_use, kr_use = ckv_all.astype(x.dtype), kr_all.astype(x.dtype)
+        kv_len = idx + S
+    else:
+        ckv_use, kr_use = ckv, k_rope_new
+
+    T = ckv_use.shape[1]
+    if c.absorb:
+        # absorbed formulation (beyond-paper opt): fold kv_b's key half into
+        # q, its value half into the output path — attention runs entirely in
+        # the (kv_lora + rope)-dim latent space and the cache is never
+        # expanded to per-head K/V.  Math identical to the expanded form.
+        kv_b = params["kv_b"].astype(x.dtype)                  # (r, H, nope+v)
+        kb, vb = kv_b[..., :c.qk_nope_dim], kv_b[..., c.qk_nope_dim:]
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, kb)       # (B,S,H,r)
+        qh = jnp.concatenate([q_lat, q_rope], -1).transpose(0, 2, 1, 3)
+        kh = jnp.concatenate([ckv_use, kr_use], -1)[:, None]   # (B,1,T,r+rope)
+        vh = ckv_use[:, None]                                  # (B,1,T,r)
+        # _naive/_blocked scale by sqrt(r+rope); the expanded form scales by
+        # sqrt(nope+rope) — pre-scale q to compensate exactly.
+        fix = ((c.kv_lora_rank + c.qk_rope_dim) ** 0.5
+               / (c.qk_nope_dim + c.qk_rope_dim) ** 0.5)
+        qh = qh * jnp.asarray(fix, qh.dtype)
+        if c.impl == "naive" or S == 1:
+            o_lat = _naive(qh, kh, vh, True, kv_len, 0.0, q_off, "bf16")
+        else:
+            o_lat = _blocked(qh, kh, vh, True, kv_len, c.bkv, 0.0, q_off,
+                             unroll=c.unroll, compute_dtype="bf16")
+        o = jnp.einsum("bhsr,rhv->bhsv", o_lat, vb)            # per-head values
+    else:
+        # expand latent -> per-head keys/values (the baseline formulation)
+        kv = jnp.einsum("btr,rhk->bthk", ckv_use, params["kv_b"].astype(x.dtype))
+        k_nope, v = kv[..., :c.qk_nope_dim], kv[..., c.qk_nope_dim:]
+        k_rope_b = jnp.broadcast_to(kr_use[:, :, None, :], (B, T, H, c.qk_rope_dim))
+
+        qh = jnp.concatenate([q_nope, q_rope], -1).transpose(0, 2, 1, 3)   # (B,H,S,Dq)
+        kh = jnp.concatenate([k_nope, k_rope_b], -1).transpose(0, 2, 1, 3)
+        vh = v.transpose(0, 2, 1, 3)                                       # (B,H,T,Dv)
+        qh = constrain(qh, ("batch", "heads", "seq", "head_dim"))
+        if c.impl == "naive" or S == 1:
+            o = _naive(qh, kh, vh, True, kv_len, 0.0, q_off, c.compute_dtype)
+        else:
+            o = _blocked(qh, kh, vh, True, kv_len, c.bkv, 0.0, q_off,
+                         unroll=c.unroll, compute_dtype=c.compute_dtype)
+    out = jnp.einsum("bhsv,hvd->bsd", o, params["wo"].astype(x.dtype))
+    return out, new_cache

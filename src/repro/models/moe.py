@@ -1,0 +1,272 @@
+"""Mixture-of-Experts layer — the paper's packet-switched NoC, verbatim.
+
+Tokens are packets; the router's top-k gate writes the destination PE
+(expert) into each packet header; dispatch/combine are the Data
+Distributor / Data Collector wrappers; per-(src,dst) buffer capacity is the
+CONNECT flit-buffer-depth analog (tokens beyond capacity are dropped, exactly
+like a bounded FIFO back-pressuring).
+
+Two engines (both first-class, selectable per config):
+
+* ``gather`` — expert parallelism over model-axis-replicated activations:
+  every model rank gathers the tokens addressed to its local experts
+  (capacity-bounded), computes, scatter-adds, and a single psum over 'model'
+  combines.  Comm = one d-sized all-reduce; no all-to-all.  Robust default
+  for giant pjit graphs.
+
+* ``noc`` — the paper-faithful packet route: activations arrive
+  sequence-sharded over 'model'; per-destination-rank packet buffers go
+  through the *topology routing schedule* (`core.routing`: fat-tree → one
+  fused all_to_all; ring/torus → ppermute rounds), experts compute, and the
+  return path reuses the same schedule.  This is phase-1+phase-2 of the
+  paper applied to an LM layer.
+
+Both engines implement the same math (property-tested against ``dense_ref``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from ..core.partition import constrain
+from .layers import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    n_experts: int
+    top_k: int
+    d_ff: int
+    capacity_factor: float = 1.25
+    impl: str = "gather"            # gather | noc | dense
+    noc_topology: str = "fattree"   # fattree | ring  (routing schedule for impl=noc)
+    act: str = "silu"
+
+
+def moe_specs(c: MoEConfig, dtype=jnp.float32) -> dict:
+    E, d, f = c.n_experts, c.d_model, c.d_ff
+    return {
+        "router": ParamSpec((d, E), ("embed", None), dtype, init="small"),
+        "gate": ParamSpec((E, d, f), ("experts", "embed", "expert_mlp"), dtype),
+        "up": ParamSpec((E, d, f), ("experts", "embed", "expert_mlp"), dtype),
+        "down": ParamSpec((E, f, d), ("experts", "expert_mlp", "embed"), dtype),
+    }
+
+
+def _act(x, kind):
+    return jax.nn.silu(x) if kind == "silu" else jax.nn.gelu(x, approximate=True)
+
+
+def _router(x_flat, wr, c: MoEConfig):
+    """x_flat (T, d) -> (weights (T,k), idx (T,k), aux_loss, (me, ce)).
+
+    The router dot keeps bf16 OPERANDS with f32 accumulation: casting the
+    operands to f32 would make the backward emit an f32 (T, d) cotangent that
+    poisons the whole residual-stream backward into f32 (2× HBM traffic on
+    every layer — found via the roofline anchor dump, §Perf C2)."""
+    logits = jax.lax.dot(x_flat, wr.astype(x_flat.dtype),
+                         preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = lax.top_k(probs, c.top_k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss terms (reduce across shards BEFORE the
+    # product — mean-of-products != product-of-means)
+    E = c.n_experts
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+    return w.astype(x_flat.dtype), idx, aux, (me, ce)
+
+
+def dense_ref(params, x, c: MoEConfig):
+    """O(E·T·d·f) reference: every token through every expert, gate-combined.
+    The oracle for both engines (small shapes only)."""
+    B, S, d = x.shape
+    xf = x.reshape(-1, d)
+    w, idx, aux, _mece = _router(xf, params["router"], c)
+    gate_full = jnp.zeros((xf.shape[0], c.n_experts), x.dtype)
+    gate_full = jax.vmap(lambda g, i, ww: g.at[i].set(ww))(gate_full, idx, w)
+    h = jnp.einsum("td,edf->tef", xf, params["gate"].astype(x.dtype))
+    u = jnp.einsum("td,edf->tef", xf, params["up"].astype(x.dtype))
+    y = jnp.einsum("tef,efd->ted", _act(h, c.act) * u, params["down"].astype(x.dtype))
+    out = jnp.einsum("ted,te->td", y, gate_full)
+    return out.reshape(B, S, d), aux
+
+
+def _expert_ffn(xe, wg, wu, wd, act):
+    """xe (E_loc, C, d) through stacked local experts."""
+    h = jnp.einsum("ecd,edf->ecf", xe, wg)
+    u = jnp.einsum("ecd,edf->ecf", xe, wu)
+    return jnp.einsum("ecf,efd->ecd", _act(h, act) * u, wd)
+
+
+# ---------------------------------------------------------------------------
+# engine 1: gather (EP over replicated activations)
+# ---------------------------------------------------------------------------
+
+def _gather_local(x_flat, wr, wg, wu, wd, c: MoEConfig, n_ranks: int, axis: str):
+    T, d = x_flat.shape
+    rank = lax.axis_index(axis)
+    epr = c.n_experts // n_ranks
+    cap = min(max(8, int(T * c.top_k * c.capacity_factor / c.n_experts)),
+              T * c.top_k)
+    w, idx, _, (me, ce) = _router(x_flat, wr, c)
+
+    # packet headers: (T*k,) destination expert + combine weight
+    flat_dst = idx.reshape(-1)
+    flat_w = w.reshape(-1)
+    tok_of = jnp.repeat(jnp.arange(T), c.top_k)
+
+    def pick(e):
+        """first-`cap` (arrival order) packet slots addressed to expert e."""
+        mine = flat_dst == e
+        score = jnp.where(mine, -jnp.arange(T * c.top_k, dtype=jnp.float32), -jnp.inf)
+        _, slots = lax.top_k(score, cap)
+        valid = mine[slots]
+        return slots, valid
+
+    local_e = rank * epr + jnp.arange(epr)
+    slots, valid = jax.vmap(pick)(local_e)                  # (epr, cap)
+    toks = tok_of[slots]                                    # (epr, cap)
+    xe = x_flat[toks] * valid[..., None].astype(x_flat.dtype)
+    ye = _expert_ffn(xe, wg, wu, wd, c.act)                 # (epr, cap, d)
+    comb = (flat_w[slots] * valid.astype(flat_w.dtype))[..., None]
+    out = jnp.zeros_like(x_flat)
+    out = out.at[toks.reshape(-1)].add((ye * comb).reshape(-1, d))
+    out = lax.psum(out, axis)                               # combine expert ranks
+    return out, (me, ce)
+
+
+# ---------------------------------------------------------------------------
+# engine 2: noc (paper packet switching over the topology schedule)
+# ---------------------------------------------------------------------------
+
+def _noc_local(x_flat, wr, wg, wu, wd, c: MoEConfig, n_ranks: int, axis: str):
+    """x_flat: (T_loc, d) — tokens sequence-sharded over `axis`.
+
+    Route token packets to expert ranks with the topology schedule, compute,
+    route back with the same schedule, combine.
+    """
+    from ..core.routing import crossbar_all_to_all, ring_all_to_all_unidir
+
+    a2a = (functools.partial(ring_all_to_all_unidir, axis_name=axis)
+           if c.noc_topology == "ring" else
+           functools.partial(crossbar_all_to_all, axis_name=axis))
+
+    T, d = x_flat.shape
+    rank = lax.axis_index(axis)
+    epr = c.n_experts // n_ranks
+    # per-(src,dst-rank) packet buffer capacity — the flit-buffer-depth analog
+    cap = min(max(8, int(T * c.top_k * c.capacity_factor / n_ranks)), T * c.top_k)
+    w, idx, _, (me, ce) = _router(x_flat, wr, c)
+
+    flat_dst_rank = (idx // epr).reshape(-1)                # (T*k,)
+    flat_e_local = (idx % epr).reshape(-1)
+    flat_w = w.reshape(-1)
+    tok_of = jnp.repeat(jnp.arange(T), c.top_k)
+
+    def pack(dst):
+        mine = flat_dst_rank == dst
+        score = jnp.where(mine, -jnp.arange(T * c.top_k, dtype=jnp.float32), -jnp.inf)
+        _, slots = lax.top_k(score, cap)
+        valid = mine[slots]
+        return slots, valid
+
+    slots, valid = jax.vmap(pack)(jnp.arange(n_ranks))       # (R, cap)
+    toks = tok_of[slots]
+    payload = x_flat[toks] * valid[..., None].astype(x_flat.dtype)      # (R, cap, d)
+    hdr_e = jnp.where(valid, flat_e_local[slots], 0)                    # (R, cap)
+    hdr_w = jnp.where(valid, flat_w[slots], 0.0)
+
+    # --- outbound hop(s): Data Distributor -> routers -> remote Collector
+    rx = a2a(payload)                                        # (R, cap, d) from each src
+    rhdr_e = a2a(hdr_e[..., None])[..., 0]
+    rvalid = a2a(valid[..., None].astype(jnp.int32))[..., 0] > 0
+
+    # --- local expert compute on received packets
+    flat_rx = rx.reshape(-1, d)                              # (R*cap, d)
+    flat_e = rhdr_e.reshape(-1)
+    onehot = jax.nn.one_hot(flat_e, epr, dtype=x_flat.dtype) * rvalid.reshape(-1, 1)
+    xe = jnp.einsum("td,te->etd", flat_rx, onehot)           # (epr, R*cap, d)
+    ye = _expert_ffn(xe, wg, wu, wd, c.act)
+    y_flat = jnp.einsum("etd,te->td", ye, onehot)            # (R*cap, d)
+
+    # --- return hop(s): same schedule back to the source rank
+    back = a2a(y_flat.reshape(n_ranks, cap, d))              # (R, cap, d), slot-aligned
+    contrib = back * (hdr_w[..., None]).astype(back.dtype) * valid[..., None].astype(back.dtype)
+    out = jnp.zeros_like(x_flat)
+    out = out.at[toks.reshape(-1)].add(contrib.reshape(-1, d))
+    return out, (me, ce)
+
+
+# ---------------------------------------------------------------------------
+# public layer
+# ---------------------------------------------------------------------------
+
+def moe_apply(params: dict, x: jax.Array, c: MoEConfig) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss).  Engine per ``c.impl``."""
+    if c.impl == "dense":
+        return dense_ref(params, x, c)
+
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or "model" not in (mesh.axis_names or ()):
+        # no mesh context (unit tests / single host): run the oracle
+        return dense_ref(params, x, c)
+    n_ranks = mesh.shape["model"]
+    if c.n_experts % n_ranks:
+        return dense_ref(params, x, c)
+
+    B, S, d = x.shape
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_batch = 1
+    for a in batch_axes:
+        n_batch *= mesh.shape[a]
+    if B % max(n_batch, 1):
+        batch_axes = ()          # tiny-batch decode: replicate over data axes
+    bspec = batch_axes if batch_axes else None
+    wspec = P("model", None, None)
+    all_axes = batch_axes + ("model",)
+    impl = c.impl
+    if impl == "noc" and (S < n_ranks or S % n_ranks):
+        impl = "gather"          # decode steps: no sequence axis to shard
+
+    def _aux_of(me, ce, axes):
+        if axes:
+            me = lax.pmean(me, axes)
+            ce = lax.pmean(ce, axes)
+        return c.n_experts * jnp.sum(me * ce)
+
+    if impl == "gather":
+        def fn(xl, wr, wg, wu, wd):
+            T = xl.shape[0] * xl.shape[1]
+            out, (me, ce) = _gather_local(xl.reshape(T, d), wr, wg, wu, wd, c,
+                                          n_ranks, "model")
+            return out.reshape(xl.shape), _aux_of(me, ce, batch_axes)
+        sm = jax.shard_map(
+            fn, mesh=mesh,
+            in_specs=(P(bspec, None, None), P(), wspec, wspec, wspec),
+            out_specs=(P(bspec, None, None), P()),
+            check_vma=False)
+        out, aux = sm(x, params["router"].astype(x.dtype), params["gate"].astype(x.dtype),
+                      params["up"].astype(x.dtype), params["down"].astype(x.dtype))
+        return out, aux.reshape(())
+
+    def fn(xl, wr, wg, wu, wd):
+        xl2 = xl.reshape(-1, d)
+        out, (me, ce) = _noc_local(xl2, wr, wg, wu, wd, c, n_ranks, "model")
+        return out.reshape(xl.shape), _aux_of(me, ce, all_axes)
+    sm = jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(bspec, "model", None), P(), wspec, wspec, wspec),
+        out_specs=(P(bspec, "model", None), P()),
+        check_vma=False)
+    out, aux = sm(x, params["router"].astype(x.dtype), params["gate"].astype(x.dtype),
+                  params["up"].astype(x.dtype), params["down"].astype(x.dtype))
+    return out, aux.reshape(())

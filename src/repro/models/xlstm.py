@@ -1,0 +1,287 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential), per arXiv:2405.04517.
+
+TPU adaptation (recorded in DESIGN.md):
+* the mLSTM recurrence C_t = f_t C_{t-1} + i_t k_t v_tᵀ is linear, so the
+  training/prefill path uses a *chunkwise* form — intra-chunk attention-style
+  matmuls with a log-gate decay matrix (MXU work), inter-chunk a scanned
+  (B, H, dk, dv) carry with running stabilizers (exp-gating never overflows).
+  The sequential scan is kept as the oracle + decode path (property-tested
+  equal).
+* projections and gates are head-local (block-diagonal), which makes heads a
+  clean tensor-parallel axis; the original's full d×d mixing would shard the
+  same logical axis on both sides of a square matmul.
+* sLSTM's h_{t-1}→gates feedback is inherently sequential; it stays a
+  ``lax.scan`` (the paper's own formulation), small per-step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.partition import constrain
+from .layers import ParamSpec, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    d_model: int
+    n_heads: int
+    proj_factor: float = 2.0          # mLSTM up-projection
+    d_conv: int = 4
+    chunk: int = 128
+    unroll: bool = False
+    slstm_ff_factor: float = 4.0 / 3.0
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.proj_factor * self.d_model)
+
+    @property
+    def dh(self) -> int:  # mLSTM head dim (of d_inner)
+        return self.d_inner // self.n_heads
+
+    @property
+    def dh_model(self) -> int:  # sLSTM head dim (of d_model)
+        return self.d_model // self.n_heads
+
+    @property
+    def slstm_ff(self) -> int:
+        return int(self.slstm_ff_factor * self.d_model)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_specs(c: XLSTMConfig, dtype=jnp.float32) -> dict:
+    d, di, H, dh = c.d_model, c.d_inner, c.n_heads, c.dh
+    return {
+        "up": ParamSpec((d, 2 * di), ("embed", "ssm_inner"), dtype),
+        "conv_w": ParamSpec((c.d_conv, di), (None, "ssm_inner"), dtype, init="small"),
+        "conv_b": ParamSpec((di,), ("ssm_inner",), dtype, init="zeros"),
+        "wq": ParamSpec((H, dh, dh), ("heads", None, None), dtype),
+        "wk": ParamSpec((H, dh, dh), ("heads", None, None), dtype),
+        "wv": ParamSpec((H, dh, dh), ("heads", None, None), dtype),
+        "wi": ParamSpec((H, dh), ("heads", None), dtype, init="small"),
+        "bi": ParamSpec((H,), ("heads",), dtype, init="zeros"),
+        "wf": ParamSpec((H, dh), ("heads", None), dtype, init="small"),
+        "bf": ParamSpec((H,), ("heads",), dtype, init="ones", scale=3.0),
+        "norm": ParamSpec((di,), ("ssm_inner",), dtype, init="ones"),
+        "down": ParamSpec((di, d), ("ssm_inner", "embed"), dtype),
+    }
+
+
+def init_mlstm_cache(c: XLSTMConfig, batch: int, dtype=jnp.float32) -> dict:
+    H, dh = c.n_heads, c.dh
+    return {
+        "conv": jnp.zeros((batch, c.d_conv - 1, c.d_inner), dtype),
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_qkv_gates(params, x, c: XLSTMConfig, conv_state):
+    from .ssm import _conv_causal
+
+    B, S, _ = x.shape
+    H, dh = c.n_heads, c.dh
+    up = x @ params["up"].astype(x.dtype)
+    xi, z = up[..., :c.d_inner], up[..., c.d_inner:]
+    xc, new_conv = _conv_causal(xi, params["conv_w"].astype(x.dtype),
+                                params["conv_b"].astype(x.dtype), conv_state)
+    xc = jax.nn.silu(xc)
+    xh = xc.reshape(B, S, H, dh)
+    q = jnp.einsum("bshd,hde->bshe", xh, params["wq"].astype(x.dtype)) * (dh ** -0.5)
+    k = jnp.einsum("bshd,hde->bshe", xh, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bshd,hde->bshe", xi.reshape(B, S, H, dh),
+                   params["wv"].astype(x.dtype))
+    li = (jnp.einsum("bshd,hd->bsh", xh, params["wi"].astype(x.dtype))
+          + params["bi"].astype(x.dtype)).astype(jnp.float32)
+    lf_raw = (jnp.einsum("bshd,hd->bsh", xh, params["wf"].astype(x.dtype))
+              + 3.0 * params["bf"].astype(x.dtype)).astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(lf_raw)
+    return q, k, v, z, li, lf, new_conv
+
+
+def _mlstm_decode_step(q, k, v, li, lf, state):
+    """Single-step stabilized recurrence.  q/k/v: (B,H,dh); li/lf: (B,H)."""
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(lf + m, li)
+    fp = jnp.exp(lf + m - m_new)[..., None, None]
+    ip = jnp.exp(li - m_new)[..., None, None]
+    k32, v32, q32 = (t.astype(jnp.float32) for t in (k, v, q))
+    C_new = fp * C + ip * (k32[..., :, None] * v32[..., None, :])
+    n_new = fp[..., 0] * n + ip[..., 0] * k32
+    num = jnp.einsum("bhkv,bhk->bhv", C_new, q32)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q32))
+    h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    return h, {"C": C_new, "n": n_new, "m": m_new}
+
+
+def _mlstm_chunked(q, k, v, li, lf, state, chunk: int, chunk_unroll: bool = False):
+    """Chunkwise-parallel mLSTM.  q/k/v (B,S,H,dh); li/lf (B,S,H)."""
+    B, S, H, dh = q.shape
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        zq = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = jnp.pad(q, zq), jnp.pad(k, zq), jnp.pad(v, zq)
+        li = jnp.pad(li, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)))
+    nq = (S + pad) // Q
+
+    def part(t):  # (B, S+, H, ...) -> (nq, B, H, Q, ...)
+        t = t.reshape(B, nq, Q, *t.shape[2:])
+        return jnp.moveaxis(t, (1, 3), (0, 2)) if t.ndim == 5 else jnp.moveaxis(t, (1, 3), (0, 3))
+
+    qc = part(q).astype(jnp.float32)       # (nq,B,H,Q,dh)
+    kc = part(k).astype(jnp.float32)
+    vc = part(v).astype(jnp.float32)
+    lic = jnp.moveaxis(li.reshape(B, nq, Q, H), (1, 3), (0, 2))  # (nq,B,H,Q)
+    lfc = jnp.moveaxis(lf.reshape(B, nq, Q, H), (1, 3), (0, 2))
+
+    def step(carry, blk):
+        Ch, nh, mc = carry                     # stabilized carry: true C = Ch·exp(mc)
+        qb, kb, vb, lib, lfb = blk             # (B,H,Q,·)
+        A = jnp.cumsum(lfb, axis=-1)           # inclusive decay prefix (B,H,Q)
+        # intra-chunk log decay matrix: logD[t,s] = A_t - A_s + li_s, s<=t
+        logD = A[..., :, None] - A[..., None, :] + lib[..., None, :]
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        logD = jnp.where(tri, logD, -jnp.inf)
+        inter_log = A + mc[..., None]          # carry contribution (B,H,Q)
+        m_t = jnp.maximum(jnp.max(logD, axis=-1), inter_log)
+        m_t = jnp.maximum(m_t, -1e30)
+        Dm = jnp.exp(logD - m_t[..., None])                      # (B,H,Q,Q)
+        w_inter = jnp.exp(inter_log - m_t)                       # (B,H,Q)
+        scores = jnp.einsum("bhtd,bhsd->bhts", qb, kb) * Dm
+        num = (jnp.einsum("bhts,bhsv->bhtv", scores, vb)
+               + w_inter[..., None] * jnp.einsum("bhkv,bhtk->bhtv", Ch, qb))
+        den = (jnp.sum(scores, axis=-1)
+               + w_inter * jnp.einsum("bhk,bhtk->bht", nh, qb))
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # carry update
+        A_Q = A[..., -1]                                          # (B,H)
+        s_log = A_Q[..., None] - A + lib                          # decay of s to chunk end
+        mc_new = jnp.maximum(A_Q + mc, jnp.max(s_log, axis=-1))
+        wk_s = jnp.exp(s_log - mc_new[..., None])                 # (B,H,Q)
+        Ch_new = (jnp.exp(A_Q + mc - mc_new)[..., None, None] * Ch
+                  + jnp.einsum("bhs,bhsk,bhsv->bhkv", wk_s, kb, vb))
+        nh_new = (jnp.exp(A_Q + mc - mc_new)[..., None] * nh
+                  + jnp.einsum("bhs,bhsk->bhk", wk_s, kb))
+        return (Ch_new, nh_new, mc_new), h
+
+    carry0 = (state["C"], state["n"], state["m"])
+    (Cf, nf, mf), hs = lax.scan(step, carry0, (qc, kc, vc, lic, lfc),
+                                unroll=nq if chunk_unroll else 1)
+    h = jnp.moveaxis(hs, (0, 2), (1, 3)).reshape(B, nq * Q, H, dh)[:, :S]
+    return h, {"C": Cf, "n": nf, "m": mf}
+
+
+def mlstm_apply(params: dict, x: jax.Array, c: XLSTMConfig,
+                cache: Optional[dict] = None) -> tuple[jax.Array, Optional[dict]]:
+    B, S, d = x.shape
+    H, dh = c.n_heads, c.dh
+    conv_state = cache["conv"] if cache is not None else None
+    q, k, v, z, li, lf, new_conv = _mlstm_qkv_gates(params, x, c, conv_state)
+    state = ({k2: cache[k2] for k2 in ("C", "n", "m")} if cache is not None
+             else {"C": jnp.zeros((B, H, dh, dh), jnp.float32),
+                   "n": jnp.zeros((B, H, dh), jnp.float32),
+                   "m": jnp.full((B, H), -1e30, jnp.float32)})
+    if S == 1:
+        h, new_state = _mlstm_decode_step(q[:, 0], k[:, 0], v[:, 0],
+                                          li[:, 0], lf[:, 0], state)
+        h = h[:, None]
+    else:
+        h, new_state = _mlstm_chunked(q, k, v, li, lf, state, c.chunk, c.unroll)
+    h = h.reshape(B, S, c.d_inner).astype(x.dtype)
+    h = rms_norm(h.reshape(B, S, H, dh), jnp.ones((dh,), x.dtype)).reshape(B, S, c.d_inner)
+    h = h * params["norm"].astype(x.dtype)
+    h = h * jax.nn.silu(z)
+    out = h @ params["down"].astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype), **new_state}
+    return out, new_cache
+
+
+def mlstm_seq_ref(params: dict, x: jax.Array, c: XLSTMConfig) -> jax.Array:
+    """Step-by-step oracle for the chunked path."""
+    B, S, _ = x.shape
+    cache = init_mlstm_cache(c, B, x.dtype)
+    outs = []
+    for t in range(S):
+        o, cache = mlstm_apply(params, x[:, t:t + 1], c, cache)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_specs(c: XLSTMConfig, dtype=jnp.float32) -> dict:
+    d, H, dh = c.d_model, c.n_heads, c.dh_model
+    sp = {}
+    for g in ("z", "i", "f", "o"):
+        sp[f"w{g}"] = ParamSpec((d, H, dh), ("embed", "heads", None), dtype)
+        sp[f"r{g}"] = ParamSpec((H, dh, dh), ("heads", None, None), dtype, init="small")
+        sp[f"b{g}"] = ParamSpec((H, dh), ("heads", None), dtype,
+                                init="ones" if g == "f" else "zeros")
+    sp["norm"] = ParamSpec((d,), ("embed",), dtype, init="ones")
+    sp["ff_up"] = ParamSpec((d, c.slstm_ff), ("embed", "mlp"), dtype)
+    sp["ff_down"] = ParamSpec((c.slstm_ff, d), ("mlp", "embed"), dtype)
+    return sp
+
+
+def init_slstm_cache(c: XLSTMConfig, batch: int, dtype=jnp.float32) -> dict:
+    H, dh = c.n_heads, c.dh_model
+    return {"c": jnp.zeros((batch, H, dh), jnp.float32),
+            "n": jnp.zeros((batch, H, dh), jnp.float32),
+            "m": jnp.full((batch, H, dh), -1e30, jnp.float32),
+            "h": jnp.zeros((batch, H, dh), jnp.float32)}
+
+
+def slstm_apply(params: dict, x: jax.Array, c: XLSTMConfig,
+                cache: Optional[dict] = None) -> tuple[jax.Array, Optional[dict]]:
+    B, S, d = x.shape
+    H, dh = c.n_heads, c.dh_model
+    pre = {g: (jnp.einsum("bsd,dhe->bshe", x, params[f"w{g}"].astype(x.dtype))
+               + (3.0 if g == "f" else 1.0) * params[f"b{g}"].astype(x.dtype)
+               ).astype(jnp.float32)
+           for g in ("z", "i", "f", "o")}
+    state0 = (cache if cache is not None else init_slstm_cache(c, B))
+
+    def step(st, ins):
+        zt, it, ft, ot = ins
+        h_prev = st["h"]
+        rz = jnp.einsum("bhe,hef->bhf", h_prev, params["rz"].astype(jnp.float32))
+        ri = jnp.einsum("bhe,hef->bhf", h_prev, params["ri"].astype(jnp.float32))
+        rf = jnp.einsum("bhe,hef->bhf", h_prev, params["rf"].astype(jnp.float32))
+        ro = jnp.einsum("bhe,hef->bhf", h_prev, params["ro"].astype(jnp.float32))
+        z = jnp.tanh(zt + rz)
+        li = it + ri
+        lf = jax.nn.log_sigmoid(ft + rf)
+        o = jax.nn.sigmoid(ot + ro)
+        m_new = jnp.maximum(lf + st["m"], li)
+        fp = jnp.exp(lf + st["m"] - m_new)
+        ip = jnp.exp(li - m_new)
+        c_new = fp * st["c"] + ip * z
+        n_new = fp * st["n"] + ip
+        h = o * c_new / jnp.maximum(n_new, 1e-6)
+        new = {"c": c_new, "n": n_new, "m": m_new, "h": h}
+        return new, h
+
+    xs = tuple(jnp.moveaxis(pre[g], 1, 0) for g in ("z", "i", "f", "o"))
+    new_state, hs = lax.scan(step, state0, xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    h = rms_norm(h, params["norm"].astype(x.dtype))
+    h = h + jax.nn.gelu(h @ params["ff_up"].astype(x.dtype),
+                        approximate=True) @ params["ff_down"].astype(x.dtype)
+    new_cache = new_state if cache is not None else None
+    return h, new_cache

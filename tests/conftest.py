@@ -1,0 +1,28 @@
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def run_with_devices(code: str, n_devices: int, timeout: int = 300) -> str:
+    """Run a python snippet in a subprocess with N fake CPU devices.
+
+    Smoke tests / benches must see 1 device (per spec), so multi-device
+    checks re-exec with XLA_FLAGS set before jax init."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, f"subprocess failed:\n{out.stdout}\n{out.stderr}"
+    return out.stdout

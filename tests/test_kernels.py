@@ -1,0 +1,147 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+# -- GF(2) BMVM ---------------------------------------------------------------
+
+@pytest.mark.parametrize("n,k,m", [(16, 4, 1), (32, 4, 3), (64, 8, 5),
+                                   (128, 4, 2), (128, 8, 8)])
+def test_gf2_bmvm_kernel_vs_oracles(n, k, m):
+    rng = np.random.default_rng(n + k)
+    A = jnp.asarray(rng.integers(0, 2, (n, n)), jnp.uint8)
+    V = jnp.asarray(rng.integers(0, 2, (m, n)), jnp.uint8)
+    lut = ref.gf2_preprocess(A, k)
+    assert lut.shape == (n // k, 2 ** k, n // k)
+    vw = ref.gf2_pack_vector(V, k).astype(jnp.uint32)
+    out_k = ops.gf2_bmvm(lut, vw, use_kernel=True)
+    out_r = ref.gf2_bmvm(lut, vw)
+    assert np.array_equal(np.asarray(out_k), np.asarray(out_r))
+    # against the direct O(n^2) oracle
+    direct = ref.gf2_matmul_oracle(A, V)
+    assert np.array_equal(np.asarray(ref.gf2_unpack_vector(out_k, k)),
+                          np.asarray(direct))
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=15, deadline=None)
+def test_gf2_linearity(seed):
+    """A(u ⊕ v) == Au ⊕ Av — GF(2) linearity through the LUT datapath."""
+    rng = np.random.default_rng(seed)
+    n, k = 32, 4
+    A = jnp.asarray(rng.integers(0, 2, (n, n)), jnp.uint8)
+    u = jnp.asarray(rng.integers(0, 2, (1, n)), jnp.uint8)
+    v = jnp.asarray(rng.integers(0, 2, (1, n)), jnp.uint8)
+    lut = ref.gf2_preprocess(A, k)
+    f = lambda x: np.asarray(ref.gf2_unpack_vector(
+        ops.gf2_bmvm(lut, ref.gf2_pack_vector(x, k).astype(jnp.uint32)), k))
+    assert np.array_equal(f(jnp.bitwise_xor(u, v)), f(u) ^ f(v))
+
+
+def test_gf2_pack_unpack_roundtrip():
+    rng = np.random.default_rng(7)
+    v = jnp.asarray(rng.integers(0, 2, (3, 64)), jnp.uint8)
+    for k in (4, 8, 16):
+        w = ref.gf2_pack_vector(v, k)
+        assert np.array_equal(np.asarray(ref.gf2_unpack_vector(w, k)), np.asarray(v))
+
+
+# -- LDPC min-sum -------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(1, 3), (7, 3), (64, 6), (200, 4), (1000, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_minsum_kernel_sweep(shape, dtype):
+    rng = np.random.default_rng(shape[0])
+    u = jnp.asarray(rng.normal(size=shape) * 4, dtype)
+    a = ops.minsum_check(u, use_kernel=True)
+    b = ref.minsum_check(u)
+    assert np.allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+@given(st.integers(2, 40), st.integers(2, 8), st.integers(0, 100))
+@settings(max_examples=25, deadline=None)
+def test_minsum_properties(n, deg, seed):
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.normal(size=(n, deg)) * 3, jnp.float32)
+    v = np.asarray(ref.minsum_check(u))
+    un = np.asarray(u)
+    for c in range(0, n, max(n // 3, 1)):
+        for j in range(deg):
+            others = np.delete(un[c], j)
+            expect = np.prod(np.sign(others)) * np.abs(others).min()
+            assert np.isclose(v[c, j], expect, atol=1e-5)
+
+
+def test_minsum_positive_matches_paper_listing2():
+    """Paper Listing 2: v1 = min(u2,u3) etc. for positive inputs, deg=3."""
+    u = jnp.asarray([[1.0, 2.0, 3.0]])
+    v = np.asarray(ref.minsum_check(u))[0]
+    assert np.allclose(v, [2.0, 1.0, 1.0])
+
+
+# -- particle filter histogram ------------------------------------------------
+
+@pytest.mark.parametrize("N,px,B", [(1, 64, 8), (10, 300, 16), (33, 517, 12),
+                                    (8, 1024, 32)])
+def test_histogram_kernel_sweep(N, px, B):
+    rng = np.random.default_rng(N + px)
+    bins = jnp.asarray(rng.integers(0, B, (N, px)), jnp.int32)
+    w = jnp.asarray(rng.uniform(0.1, 1, (px,)), jnp.float32)
+    rh = jnp.asarray(rng.uniform(0, 1, (B,)), jnp.float32)
+    rh = rh / rh.sum()
+    h_k, bc_k = ops.particle_histogram(bins, w, rh, use_kernel=True)
+    h_r = ref.weighted_histogram(bins, w, B)
+    bc_r = ref.bhattacharyya(h_r, rh)
+    assert np.allclose(np.asarray(h_k), np.asarray(h_r), atol=1e-5)
+    assert np.allclose(np.asarray(bc_k), np.asarray(bc_r), atol=1e-5)
+
+
+def test_histogram_normalized():
+    rng = np.random.default_rng(3)
+    bins = jnp.asarray(rng.integers(0, 8, (5, 100)), jnp.int32)
+    w = jnp.ones((100,), jnp.float32)
+    h, _ = ops.particle_histogram(bins, w, jnp.ones((8,)) / 8)
+    assert np.allclose(np.asarray(h).sum(-1), 1.0, atol=1e-5)
+
+
+# -- flash attention ----------------------------------------------------------
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,T,D", [
+    (1, 4, 2, 64, 64, 32), (2, 2, 2, 37, 37, 16), (1, 8, 2, 16, 128, 32),
+    (1, 2, 1, 128, 256, 64), (2, 4, 4, 100, 100, 8)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(B, Hq, Hkv, S, T, D, causal):
+    rng = np.random.default_rng(S + T)
+    q = jnp.asarray(rng.normal(size=(B, Hq, S, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, T, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, T, D)), jnp.float32)
+    o_k = ops.flash_attention(q, k, v, causal, True)
+    o_r = ref.mha(q, k, v, causal=causal)
+    assert np.allclose(np.asarray(o_k), np.asarray(o_r), atol=3e-5), \
+        np.abs(np.asarray(o_k) - np.asarray(o_r)).max()
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 2, 32, 16)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 2, 32, 16)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 2, 32, 16)), jnp.bfloat16)
+    o_k = ops.flash_attention(q, k, v, True, True)
+    o_r = ref.mha(q, k, v, causal=True)
+    assert np.allclose(np.asarray(o_k, np.float32), np.asarray(o_r, np.float32),
+                       atol=3e-2)
+
+
+def test_flash_attention_grad_finite():
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.normal(size=(1, 4, 16, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 16, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 16, 8)), jnp.float32)
+    g = jax.grad(lambda q_: ops.flash_attention(q_, k, v, True, False).sum())(q)
+    assert bool(jnp.all(jnp.isfinite(g)))

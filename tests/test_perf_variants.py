@@ -1,0 +1,55 @@
+"""Beyond-paper performance variants must preserve semantics."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.models.attention import _naive
+from repro.models.layers import init_params
+
+
+def test_bf16_grouped_decode_attention_matches_f32(rng):
+    q = jnp.asarray(rng.normal(size=(2, 8, 1, 32)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(2, 2, 64, 32)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(2, 2, 64, 32)), jnp.bfloat16)
+    a = _naive(q, k, v, True, jnp.int32(50), 0.0, jnp.int32(49))
+    b = _naive(q, k, v, True, jnp.int32(50), 0.0, jnp.int32(49),
+               compute_dtype="bf16")
+    d = float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+    assert d < 0.03, d
+
+
+def test_bf16_attention_full_model_close(rng):
+    cfg = get_config("llama3.2-1b", smoke=True)
+    params = init_params(T.abstract_params(cfg), jax.random.key(0))
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32)}
+    base, _, _ = T.forward(params, batch, cfg)
+    opt, _, _ = T.forward(params, batch, cfg.replace(attn_impl="naive",
+                                                     attn_compute_dtype="bf16"))
+    scale = float(jnp.max(jnp.abs(base)))
+    assert float(jnp.max(jnp.abs(base - opt))) < 0.05 * max(scale, 1.0)
+
+
+def test_serve_param_dtype_bf16(rng):
+    """Serving with bf16 params: logits close to f32-param serving."""
+    cfg = get_config("llama3.2-1b", smoke=True)
+    params = init_params(T.abstract_params(cfg), jax.random.key(0))
+    params_bf = jax.tree.map(lambda a: a.astype(jnp.bfloat16), params)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 12)), jnp.int32)}
+    a, _, _ = T.forward(params, batch, cfg)
+    b, _, _ = T.forward(params_bf, batch, cfg)
+    scale = float(jnp.max(jnp.abs(a)))
+    assert float(jnp.max(jnp.abs(a - b.astype(a.dtype)))) < 0.08 * max(scale, 1.0)
+
+
+def test_report_enrichment_math():
+    from repro.configs import SHAPES
+    from repro.launch.report import model_bytes
+    cfg = get_config("llama3.2-1b")
+    tb = model_bytes(cfg, SHAPES["train_4k"])
+    assert tb > 24 * cfg.param_count()          # p/m/v read+write floor
+    db = model_bytes(cfg, SHAPES["decode_32k"])
+    assert db > 2 * cfg.param_count()           # params + cache read

@@ -1,0 +1,46 @@
+"""Topology invariants (CONNECT analog), incl. the paper's Table-V ordering."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compare, make_topology
+from repro.core.topology import TOPOLOGIES
+
+
+@pytest.mark.parametrize("name", sorted(TOPOLOGIES))
+@pytest.mark.parametrize("n", [4, 8, 12, 16, 64])
+def test_link_symmetry_and_hops(name, n):
+    t = make_topology(name, n)
+    t.validate()
+    for i in range(n):
+        assert t.hops(i, i) == 0
+        for j in t.neighbors(i):
+            assert t.hops(i, j) == 1
+    assert t.n_links() > 0
+    assert t.bisection_links() >= 1
+
+
+@given(st.sampled_from(sorted(TOPOLOGIES)), st.integers(2, 20))
+@settings(max_examples=40, deadline=None)
+def test_hops_symmetric(name, n):
+    t = make_topology(name, n)
+    for i in range(0, n, max(n // 4, 1)):
+        for j in range(0, n, max(n // 3, 1)):
+            assert t.hops(i, j) == t.hops(j, i)
+
+
+def test_table5_ordering():
+    """Paper Table V: ring < mesh < torus < fat-tree, for both rounds and
+    the alpha-beta time model."""
+    rows = {r["topology"]: r for r in compare(64, chunk_bytes=1024)}
+    assert (rows["ring"]["rounds"] > rows["mesh"]["rounds"]
+            > rows["torus"]["rounds"] > rows["fattree"]["rounds"])
+    assert (rows["ring"]["model_time_us"] > rows["mesh"]["model_time_us"]
+            > rows["torus"]["model_time_us"] > rows["fattree"]["model_time_us"])
+    # cost ordering too (links = hardware cost proxy): fat tree pays bisection
+    assert rows["fattree"]["bisection_links"] > rows["torus"]["bisection_links"]
+
+
+def test_avg_hops_sane():
+    assert make_topology("fattree", 16).avg_hops() == 1.0
+    assert make_topology("ring", 16).avg_hops() > make_topology("torus", 16).avg_hops()

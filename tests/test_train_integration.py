@@ -1,0 +1,32 @@
+"""End-to-end training integration on the host devices (1 CPU)."""
+import numpy as np
+import pytest
+
+
+def test_tiny_training_loss_decreases():
+    from repro.launch.train import run
+    losses = run(["--arch", "llama3.2-1b", "--smoke", "--steps", "120",
+                  "--batch", "8", "--seq", "32", "--lr", "2e-3",
+                  "--log-every", "60"])
+    first = np.mean(losses[:10])
+    last = np.mean(losses[-10:])
+    assert last < first - 0.1, (first, last)
+
+
+def test_serve_driver_batched_requests():
+    from repro.launch.serve import run
+    out = run(["--arch", "llama3.2-1b", "--smoke", "--requests", "6",
+               "--batch", "3", "--prompt-len", "16", "--gen", "4"])
+    assert out.shape == (6, 4)
+    assert (out >= 0).all()
+
+
+def test_train_with_checkpoint_restart(tmp_path):
+    from repro.launch.train import run
+    d = str(tmp_path / "ck")
+    run(["--arch", "llama3.2-1b", "--smoke", "--steps", "6", "--batch", "4",
+         "--seq", "16", "--ckpt", d, "--ckpt-every", "3"])
+    # resume picks up from the checkpoint and continues to 10
+    losses = run(["--arch", "llama3.2-1b", "--smoke", "--steps", "10",
+                  "--batch", "4", "--seq", "16", "--ckpt", d, "--ckpt-every", "5"])
+    assert len(losses) >= 4
