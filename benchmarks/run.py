@@ -7,11 +7,19 @@ Tables:
   table1_wrapper   — paper Tables I–III analog: PE cost without/with the NoC
                      wrapper (bytes + flit framing overhead).
   table4_bmvm_iter — paper Table IV analog: BMVM speedup vs iterations r
-                     (software oracle vs kernel datapath), n=64 k=8 f=2, 4 PEs.
+                     (software oracle vs kernel datapath), n=64 k=8 f=2, 4 PEs;
+                     plus the NoC-sim r-sweep: compiled flit-program engine
+                     (mode="sim") vs the seed per-message loop
+                     (mode="sim_python"), reporting us/iter and speedup.
   table5_topology  — paper Table V analog: BMVM time vs topology
                      (ring/mesh/torus/fattree), measured round-by-round
                      schedule simulation + analytic alpha-beta model at the
                      paper's 64-PE scale.
+  table5_batched   — batched flit-program engine: B input sets through one
+                     (B, n, n, bytes) simulation vs B sequential sim runs.
+  placement_search — annealing optimize_placement vs round-robin/greedy:
+                     Σ traffic×hops cost (and cross-pod cut bytes) for the
+                     LDPC / BMVM / particle-filter graphs.
   fig_ldpc         — LDPC decoder throughput (vectorized+kernel) + NoC stats.
   fig_pf           — particle-filter tracking throughput + accuracy.
   lm_step          — LM-stack microbench: smoke-arch train-step wall time.
@@ -77,6 +85,28 @@ def table4_bmvm_iter(fast: bool) -> list[str]:
         it(Vj)  # compile
         t_hw = _timeit(lambda: jax.block_until_ready(it(Vj)), n=3)
         rows.append(f"table4_bmvm_r{r},{t_hw:.1f},speedup_vs_sw={t_sw / t_hw:.2f}")
+    # NoC-sim engine r-sweep: compiled flit program vs the seed per-message loop
+    from repro.core import NoCExecutor, make_topology
+    from repro.kernels import ref as kref
+
+    v1 = V[0]
+    g, feedback = bmvm.build_bmvm_graph(np.asarray(lut), cfg)
+    ex = NoCExecutor(g, make_topology(cfg.topology, 2 * cfg.n_pe))
+    vw = np.asarray(kref.gf2_pack_vector(jnp.asarray(v1), cfg.k), np.uint32)
+    f = cfg.fold
+    inputs = {f"lut{i}.v": vw[i * f:(i + 1) * f] for i in range(cfg.n_pe)}
+    ex.run_iterative(inputs, feedback, 2, mode="sim")         # jit warmup
+    ex.run_iterative(inputs, feedback, 2, mode="sim_python")  # fair warmup
+    for r in ([1, 10] if fast else [1, 10, 100]):
+        t_leg = _timeit(lambda: ex.run_iterative(inputs, feedback, r, mode="sim_python"),
+                        n=1, warmup=0) / r
+        t_sim = _timeit(lambda: ex.run_iterative(inputs, feedback, r, mode="sim"),
+                        n=1, warmup=0) / r
+        out_s, _ = ex.run_iterative(inputs, feedback, r, mode="sim")
+        out_l, _ = ex.run_iterative(inputs, feedback, r, mode="sim_python")
+        assert all(np.array_equal(out_s[k], out_l[k]) for k in out_s)
+        rows.append(f"table4_simengine_r{r},{t_sim:.1f},"
+                    f"seed_loop_us={t_leg:.1f} speedup_vs_seed_loop={t_leg / t_sim:.2f}")
     return rows
 
 
@@ -105,6 +135,78 @@ def table5_topology(fast: bool) -> list[str]:
     for row in compare(64, chunk_bytes=2 * (n // k // f)):
         rows.append(f"table5_model_{row['topology']},{row['model_time_us']:.2f},"
                     f"rounds={row['rounds']} avg_hops={row['avg_hops']}")
+    return rows
+
+
+def table5_batched(fast: bool) -> list[str]:
+    """Batched engine: B input sets through one (B, n, n, bytes) simulation."""
+    from repro.apps import bmvm
+    from repro.core import NoCExecutor, make_topology
+    from repro.kernels import ref as kref
+
+    rng = np.random.default_rng(5)
+    cfg = bmvm.BMVMConfig(n=64, k=8, fold=2)
+    A = rng.integers(0, 2, (64, 64)).astype(np.uint8)
+    lut = np.asarray(bmvm.preprocess(A, cfg))
+    g, _ = bmvm.build_bmvm_graph(lut, cfg)
+    B = 8 if fast else 32
+    V = rng.integers(0, 2, (B, 64)).astype(np.uint8)
+    vw = np.asarray(kref.gf2_pack_vector(jnp.asarray(V), cfg.k), np.uint32)  # (B, C)
+    f = cfg.fold
+    rows = []
+    for topo in ("ring", "mesh", "torus", "fattree"):
+        ex = NoCExecutor(g, make_topology(topo, 2 * cfg.n_pe))
+        binp = {f"lut{i}.v": vw[:, i * f:(i + 1) * f] for i in range(cfg.n_pe)}
+        sinp = [{f"lut{i}.v": vw[b, i * f:(i + 1) * f] for i in range(cfg.n_pe)}
+                for b in range(B)]
+        ex.run_batch(binp)                 # vmap/jit warmup
+        [ex.run(s) for s in sinp[:1]]
+        t_b = _timeit(lambda: ex.run_batch(binp), n=2, warmup=0)
+        t_s = _timeit(lambda: [ex.run(s) for s in sinp], n=2, warmup=0)
+        bouts, bstats = ex.run_batch(binp)
+        souts = [ex.run(s)[0] for s in sinp]
+        assert all(np.array_equal(bouts[k][b], souts[b][k])
+                   for b in range(B) for k in bouts)
+        rows.append(f"table5_batched_{topo},{t_b:.0f},B={B} seq_us={t_s:.0f} "
+                    f"speedup={t_s / t_b:.2f} rounds={bstats.rounds}")
+    return rows
+
+
+def placement_search(fast: bool) -> list[str]:
+    """Annealing placement search vs round-robin/greedy on the app graphs."""
+    from repro.apps import bmvm, ldpc
+    from repro.apps.particle_filter import PFConfig, build_pf_graph
+    from repro.core import (cut, make_topology, optimize_placement, place_greedy,
+                            place_round_robin, placement_cost)
+
+    iters = 800 if fast else 4000
+    rng = np.random.default_rng(6)
+    graphs = []
+    g_ldpc, _ = ldpc.build_ldpc_graph(ldpc.fano_plane_H())
+    graphs.append(("ldpc_fano", g_ldpc, make_topology("mesh", 16)))
+    cfg = bmvm.BMVMConfig(n=64, k=8, fold=2)
+    A = rng.integers(0, 2, (64, 64)).astype(np.uint8)
+    g_bmvm, _ = bmvm.build_bmvm_graph(np.asarray(bmvm.preprocess(A, cfg)), cfg)
+    graphs.append(("bmvm", g_bmvm, make_topology("mesh", 2 * cfg.n_pe)))
+    graphs.append(("pf", build_pf_graph(PFConfig(n_particles=64), 4),
+                   make_topology("mesh", 8)))
+    rows = []
+    for name, g, topo in graphs:
+        rr = placement_cost(g, topo, place_round_robin(g, topo))
+        gr = placement_cost(g, topo, place_greedy(g, topo))
+        t0 = time.monotonic()
+        opt = optimize_placement(g, topo, iters=iters, seed=0)
+        dt = (time.monotonic() - t0) * 1e6
+        oc = placement_cost(g, topo, opt)
+        rows.append(f"placement_{name},{dt:.0f},cost_rr={rr} cost_greedy={gr} "
+                    f"cost_opt={oc} gain_vs_rr={rr / max(oc, 1):.2f}x")
+    # cut-aware variant: 2-pod split of the LDPC mesh
+    pods = [0] * 8 + [1] * 8
+    topo = make_topology("mesh", 16)
+    opt = optimize_placement(g_ldpc, topo, pod_of_node=pods, iters=iters, seed=0)
+    cb_rr = cut(g_ldpc, place_round_robin(g_ldpc, topo), pods).cut_bytes(g_ldpc)
+    cb_opt = cut(g_ldpc, opt, pods).cut_bytes(g_ldpc)
+    rows.append(f"placement_ldpc_cut,0,cut_bytes_rr={cb_rr} cut_bytes_opt={cb_opt}")
     return rows
 
 
@@ -144,7 +246,7 @@ def fig_pf(fast: bool) -> list[str]:
 
 def lm_step(fast: bool) -> list[str]:
     from repro.configs import get_config
-    from repro.launch.mesh import make_host_mesh
+    from repro.launch.mesh import make_host_mesh, set_mesh
     from repro.launch.steps import make_train_step
     from repro.models import transformer as T
     from repro.models.layers import init_params
@@ -164,7 +266,7 @@ def lm_step(fast: bool) -> list[str]:
                  "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
         if cfg.family == "encdec":
             batch["frames"] = jnp.zeros((B, cfg.enc_seq, cfg.d_frontend), jnp.float32)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             step = jax.jit(make_train_step(cfg, mesh, AdamWConfig()))
             state, _ = step(state, batch)  # compile
             t = _timeit(lambda: jax.block_until_ready(step(state, batch)[1]["loss"]), n=3)
@@ -176,6 +278,8 @@ TABLES = {
     "table1_wrapper": table1_wrapper,
     "table4_bmvm_iter": table4_bmvm_iter,
     "table5_topology": table5_topology,
+    "table5_batched": table5_batched,
+    "placement_search": placement_search,
     "fig_ldpc": fig_ldpc,
     "fig_pf": fig_pf,
     "lm_step": lm_step,

@@ -26,7 +26,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..core import NoCExecutor, PE, Port, TaskGraph, make_topology
+from ..compat import shard_map
+from ..core import NoCExecutor, PE, Port, TaskGraph, make_topology, resolve_placement
 from ..core.routing import all_to_all_for, topology_axes
 from ..kernels import ops as kops
 from ..kernels import ref as kref
@@ -121,12 +122,17 @@ def build_bmvm_graph(lut_np: np.ndarray, cfg: BMVMConfig) -> tuple[TaskGraph, li
 
 
 def iterate_noc_sim(lut: jax.Array, v_bits: np.ndarray, cfg: BMVMConfig, r: int,
-                    topology: Optional[str] = None, n_nodes: Optional[int] = None):
-    """(decoded vector, NoCStats) — the Table-V measurement path."""
+                    topology: Optional[str] = None, n_nodes: Optional[int] = None,
+                    placement="rr"):
+    """(decoded vector, NoCStats) — the Table-V measurement path.
+
+    ``placement``: 'rr' | 'greedy' | 'opt' (annealing search) or an explicit
+    PE→node mapping."""
     topo_name = topology or cfg.topology
     n_nodes = n_nodes or 2 * cfg.n_pe
     g, feedback = build_bmvm_graph(np.asarray(lut), cfg)
-    ex = NoCExecutor(g, make_topology(topo_name, n_nodes))
+    topo = make_topology(topo_name, n_nodes)
+    ex = NoCExecutor(g, topo, placement=resolve_placement(g, topo, placement))
     v1 = np.asarray(v_bits).reshape(-1)               # single vector (n,)
     vw = np.asarray(kref.gf2_pack_vector(jnp.asarray(v1), cfg.k), np.uint32)
     f = cfg.fold
@@ -192,8 +198,8 @@ def iterate_spmd(lut: jax.Array, v_bits: jax.Array, cfg: BMVMConfig, r: int,
             for _ in range(r):
                 out = local(lut_loc, out)
             return out
-        sm = jax.shard_map(fn, mesh=mesh, in_specs=(lspec, vspec),
-                           out_specs=vspec, check_vma=False)
+        sm = shard_map(fn, mesh=mesh, in_specs=(lspec, vspec),
+                       out_specs=vspec, check_vma=False)
         return sm(lut_, vw_)
 
     out_w = run(lut, vw)

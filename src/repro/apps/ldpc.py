@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import (NoCConfig, NoCExecutor, PE, Port, TaskGraph, cut, make_topology,
-                    place_round_robin)
+                    place_round_robin, resolve_placement)
 from ..kernels import ops as kops
 from ..kernels import ref as kref
 
@@ -146,14 +146,17 @@ def build_ldpc_graph(H: np.ndarray) -> tuple[TaskGraph, list[tuple[str, str]]]:
 
 def decode_on_noc(H: np.ndarray, llr: np.ndarray, n_iters: int,
                   topology: str = "mesh", n_nodes: int = 16,
-                  pods: Optional[list[int]] = None):
+                  pods: Optional[list[int]] = None,
+                  placement="rr"):
     """Full paper flow: graph -> placement -> (optional 2-pod cut) -> sim.
 
-    Initial check inputs are the channel LLRs of the connected bits (the
-    standard initialization u_ij^{(0)} = llr_j)."""
+    ``placement``: 'rr' | 'greedy' | 'opt' (annealing search, cut-aware when
+    ``pods`` is given) or an explicit PE→node mapping.  Initial check inputs
+    are the channel LLRs of the connected bits (the standard initialization
+    u_ij^{(0)} = llr_j)."""
     g, feedback = build_ldpc_graph(H)
     topo = make_topology(topology, n_nodes)
-    placement = place_round_robin(g, topo)
+    placement = resolve_placement(g, topo, placement, pod_of_node=pods)
     plan = None
     if pods is not None:
         plan = cut(g, placement, pods)

@@ -20,7 +20,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..core import NoCExecutor, PE, Port, TaskGraph, make_topology
+from ..core import NoCExecutor, PE, Port, TaskGraph, make_topology, resolve_placement
 from ..kernels import ops as kops
 from ..kernels import ref as kref
 
@@ -154,10 +154,14 @@ def build_pf_graph(cfg: PFConfig, n_pe: int) -> TaskGraph:
 
 
 def track_on_noc(frames: np.ndarray, cfg: PFConfig, n_pe: int = 4,
-                 topology: str = "mesh", n_nodes: int = 8):
-    """Paper-faithful NoC execution; returns (centers, total NoCStats)."""
+                 topology: str = "mesh", n_nodes: int = 8,
+                 placement="rr"):
+    """Paper-faithful NoC execution; returns (centers, total NoCStats).
+
+    ``placement``: 'rr' | 'greedy' | 'opt' or an explicit PE→node mapping."""
     g = build_pf_graph(cfg, n_pe)
-    ex = NoCExecutor(g, make_topology(topology, n_nodes))
+    topo = make_topology(topology, n_nodes)
+    ex = NoCExecutor(g, topo, placement=resolve_placement(g, topo, placement))
     key = jax.random.key(cfg.seed)
     frames_j = jnp.asarray(frames)
     f0 = frames_j[0]

@@ -1,0 +1,67 @@
+"""Version portability shims for the pinned-vs-current jax API drift.
+
+The repo targets the modern ``jax.shard_map`` / ``jax.set_mesh`` surface; on
+older jax (< 0.5) those live at ``jax.experimental.shard_map.shard_map`` (with
+``check_rep``/``auto`` instead of ``check_vma``/``axis_names``) and the
+``Mesh`` context manager.  Every internal call site goes through these
+wrappers so the same code runs on both.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def axis_size(axis_name) -> int:
+    """``lax.axis_size`` portable to old jax, where ``psum`` of a Python int
+    is evaluated statically against the axis env (returns a concrete int)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+# New-style shard_map implies the modern partial-auto lowering; without it,
+# sharding constraints inside a partially-manual region crash old XLA.
+MODERN_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def manual_axes_in_scope() -> set:
+    """Mesh axis names currently bound as manual collectives axes (i.e. we are
+    inside shard_map/pmap over them).  Sharding constraints must not mention
+    these."""
+    try:
+        from jax._src import core as _core
+        return set(_core.get_axis_env().axis_names())
+    except Exception:
+        return set()
+
+
+def get_abstract_mesh():
+    """Ambient mesh, portable: ``jax.sharding.get_abstract_mesh`` on new jax,
+    the ``with mesh:`` thread-local physical mesh on old.  None if unset."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    try:
+        from jax.interpreters.pxla import thread_resources
+        m = thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True,
+              axis_names=None):
+    """``jax.shard_map`` portable across the 0.4.x → 0.5+ API rename.
+
+    ``axis_names`` (new API) = the set of *manual* mesh axes; mapped onto the
+    old API's complement ``auto`` set."""
+    if hasattr(jax, "shard_map"):
+        kw = dict(check_vma=check_vma)
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = dict(check_rep=check_vma)
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

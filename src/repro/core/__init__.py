@@ -10,8 +10,9 @@ noc        — the executor + flit accounting (Tables I–V analogs)
 from .graph import PE, Channel, GraphError, Port, TaskGraph
 from .noc import NoCConfig, NoCExecutor, NoCStats, wrapper_overhead
 from .partition import (DEFAULT_RULES, PartitionPlan, constrain, cross_pod_mean, cut,
-                        logical_to_spec, named_sharding, place_greedy,
-                        place_round_robin, placement_cost)
+                        logical_to_spec, named_sharding, optimize_placement,
+                        place_greedy, place_round_robin, placement_cost,
+                        resolve_placement)
 from .routing import (all_to_all_for, crossbar_all_to_all, grid_all_to_all,
                       line_all_to_all, ring_all_to_all_unidir, simulate_schedule,
                       topology_axes, transpose_oracle)

@@ -8,12 +8,40 @@ phase-1 (`core.graph`) are placed on a CONNECT-style topology
 
 Execution modes
 ---------------
-* ``direct``  — `TaskGraph.run`; the pure-software oracle (the paper's
+* ``direct``     — `TaskGraph.run`; the pure-software oracle (the paper's
   "multithreaded message passing software version").
-* ``sim``     — fires PEs wave-by-wave and physically moves every message
-  round-by-round through the topology schedule (numpy).  Produces the
-  NoCStats used by the Table-IV/V-style benchmarks, and — by construction —
-  bit-identical outputs to ``direct`` (tested).
+* ``sim``        — the compiled **flit-program engine**: fires PEs
+  wave-by-wave and physically moves every message round-by-round through the
+  topology schedule with one vectorized numpy scatter/gather per wave.
+  Produces the NoCStats used by the Table-IV/V-style benchmarks, and — by
+  construction — bit-identical outputs to ``direct`` (tested).
+* ``sim_python`` — the original per-message reference loop (dict framing +
+  ``tobytes``/``frombuffer`` per message).  Kept as the behavioral baseline
+  the engine is benchmarked and property-tested against.
+
+The flit-program compile step
+-----------------------------
+Because the graph is *static* dataflow (every channel's shape/dtype is a
+declared contract), the entire framing of a wave is known at executor
+construction time.  ``NoCExecutor.__init__`` therefore compiles, per wave, a
+:class:`_WaveProgram`:
+
+* the flit-padded byte offset of every message inside its (src, dst) node
+  buffer (CONNECT flit framing, ``flit_data_width`` granularity);
+* flat ``pack_idx``/``gather_idx`` index vectors that scatter the wave's
+  concatenated payload bytes into the ``(n, n, buf_bytes)`` message cube and
+  gather them back out of the delivered ``(n_dst, n_src, buf_bytes)`` cube;
+* the wave's *static* NoCStats increments (payload bytes, flit count,
+  cross-pod message/wire-byte/beat counts) — these depend only on contracts
+  and placement, never on values.
+
+``run`` then does one ``reshape(-1)[pack_idx] = payload`` scatter, one
+``simulate_schedule`` call, and one ``reshape(-1)[gather_idx]`` gather per
+wave instead of per-message Python loops; ``run_iterative`` reuses the
+compiled program across all iterations, and ``run_batch`` moves B independent
+input sets through the topology in a single ``(B, n, n, bytes)`` simulation.
+PE bodies are jit-cached per PE (with a transparent eager fallback), so the
+firing side of the wave is compiled once as well.
 
 Flit accounting mirrors CONNECT's link model (default flit_data_width=16,
 the paper's BMVM NoC config) and powers the Tables I–III "with/without
@@ -28,8 +56,10 @@ from typing import Any, Mapping, Optional
 
 import numpy as np
 
+import jax
+
 from . import serdes as qserdes
-from .graph import TaskGraph
+from .graph import GraphError, TaskGraph
 from .partition import PartitionPlan
 from .routing import ScheduleStats, simulate_schedule
 from .topology import Topology
@@ -49,6 +79,11 @@ class NoCStats:
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
 
+    def add(self, other: "NoCStats") -> "NoCStats":
+        for f in dataclasses.fields(NoCStats):
+            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+        return self
+
 
 @dataclasses.dataclass(frozen=True)
 class NoCConfig:
@@ -56,14 +91,15 @@ class NoCConfig:
 
     flit_data_width: int = 16          # bits
     flit_buffer_depth: int = 8         # capacity factor analog for MoE dispatch
-    serdes: qserdes.QuasiSerdesConfig = qserdes.QuasiSerdesConfig()
+    serdes: qserdes.QuasiSerdesConfig = dataclasses.field(
+        default_factory=qserdes.QuasiSerdesConfig)
 
     def flits_for(self, nbytes: int) -> int:
         per = self.flit_data_width // 8
         return -(-nbytes // per)
 
 
-def wrapper_overhead(graph: TaskGraph, cfg: NoCConfig = NoCConfig()) -> list[dict]:
+def wrapper_overhead(graph: TaskGraph, cfg: Optional[NoCConfig] = None) -> list[dict]:
     """Tables I–III analog: per-PE cost without vs with the NoC wrapper.
 
     'wo_wrapper_bytes'  — the PE's raw argument/result bytes (the bare module);
@@ -71,6 +107,7 @@ def wrapper_overhead(graph: TaskGraph, cfg: NoCConfig = NoCConfig()) -> list[dic
     'flit_bytes'        — framed on-link size incl. padding to flit width;
     'overhead'          — (with - without) / without, the Table-I ratio.
     """
+    cfg = cfg or NoCConfig()
     rows = []
     for pe in graph.pes.values():
         in_b = sum(p.nbytes for p in pe.inputs)
@@ -85,18 +122,49 @@ def wrapper_overhead(graph: TaskGraph, cfg: NoCConfig = NoCConfig()) -> list[dic
     return rows
 
 
+# ---------------------------------------------------------------------------
+# compiled flit program
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _MsgSlot:
+    """One channel message inside a wave's compiled layout."""
+
+    src_pe: str
+    src_port: str
+    dst_pe: str
+    dst_port: str
+    shape: tuple[int, ...]
+    dtype: np.dtype
+    nbytes: int
+    a: int                 # [a:b) segment in the wave's payload byte vector
+    b: int
+
+
+@dataclasses.dataclass(frozen=True)
+class _WaveProgram:
+    """Static framing layout of one wave (compiled at executor construction)."""
+
+    slots: tuple[_MsgSlot, ...]
+    payload_nbytes: int    # Σ raw message bytes (the payload vector length)
+    buf_bytes: int         # per-(src,dst) buffer size incl. flit padding
+    pack_idx: np.ndarray   # flat indices into (n, n, buf_bytes) per payload byte
+    gather_idx: np.ndarray # flat indices into delivered (n_dst, n_src, buf_bytes)
+    static: NoCStats       # value-independent stats increment for this wave
+
+
 class NoCExecutor:
     def __init__(self, graph: TaskGraph, topo: Topology,
                  placement: Optional[Mapping[str, int]] = None,
                  plan: Optional[PartitionPlan] = None,
-                 cfg: NoCConfig = NoCConfig()):
+                 cfg: Optional[NoCConfig] = None):
         from .partition import place_round_robin
 
         self.graph = graph
         self.topo = topo
         self.placement = dict(placement or (plan.placement if plan else place_round_robin(graph, topo)))
         self.plan = plan
-        self.cfg = cfg
+        self.cfg = cfg or NoCConfig()
         graph.validate()
         self._order = graph.firing_order()
         # group PEs into waves by dataflow depth
@@ -112,22 +180,202 @@ class NoCExecutor:
             while len(self.waves) <= depth[n]:
                 self.waves.append([])
             self.waves[depth[n]].append(n)
+        self._chan_by_src: dict[str, list] = {n: [] for n in graph.pes}
+        for c in graph.channels:
+            self._chan_by_src[c.src_pe].append(c)
+        self.programs: list[_WaveProgram] = [self._compile_wave(w) for w in self.waves]
+        # jit caches for PE firing (sim/batch modes), keyed by id(pe.fn);
+        # fall back to eager per distinct body
+        self._jit_fns: dict[int, Any] = {}
+        self._jit_ok: dict[int, bool] = {}
+        self._vmap_fns: dict[int, Any] = {}
+        self._vmap_ok: dict[int, bool] = {}
+
+    # -- compile -------------------------------------------------------------
+    def _compile_wave(self, wave: list[str]) -> _WaveProgram:
+        g, cfg = self.graph, self.cfg
+        n = self.topo.n_nodes
+        flit_w = cfg.flit_data_width // 8
+        pod_of = self.plan.pod_of_node if self.plan is not None else None
+        slots: list[_MsgSlot] = []
+        pair_off: dict[tuple[int, int], int] = {}
+        static = NoCStats()
+        seg = 0
+        placed: list[tuple[int, int, int]] = []   # (src_node, dst_node, pair_offset)
+        for name in wave:
+            for c in self._chan_by_src[name]:
+                port = g.pes[c.src_pe].out_port(c.src_port)
+                nbytes = port.nbytes
+                s, d = self.placement[c.src_pe], self.placement[c.dst_pe]
+                off = pair_off.get((s, d), 0)
+                pair_off[(s, d)] = off + cfg.flits_for(nbytes) * flit_w  # flit padding
+                slots.append(_MsgSlot(c.src_pe, c.src_port, c.dst_pe, c.dst_port,
+                                      tuple(port.shape), np.dtype(port.dtype),
+                                      nbytes, seg, seg + nbytes))
+                placed.append((s, d, off))
+                seg += nbytes
+                static.payload_bytes += nbytes
+                static.flits += cfg.flits_for(nbytes)
+                if pod_of is not None and pod_of[s] != pod_of[d]:
+                    static.cross_pod_msgs += 1
+                    static.cross_pod_wire_bytes += qserdes.link_bytes_on_wire(
+                        tuple(port.shape), port.dtype, cfg.serdes)
+                    static.cross_pod_beats += cfg.serdes.lanes
+        buf_bytes = max(pair_off.values(), default=0)
+        pack, gather = [], []
+        for slot, (s, d, off) in zip(slots, placed):
+            span = np.arange(off, off + slot.nbytes, dtype=np.int64)
+            pack.append((s * n + d) * buf_bytes + span)
+            gather.append((d * n + s) * buf_bytes + span)   # delivered is (dst, src)
+        cat = lambda xs: (np.concatenate(xs) if xs else np.zeros(0, np.int64))
+        return _WaveProgram(tuple(slots), seg, buf_bytes, cat(pack), cat(gather), static)
+
+    # -- firing --------------------------------------------------------------
+    # jit/vmap caches are keyed by the fn object, not the PE name: graphs that
+    # register one body for many PEs (e.g. the particle-filter group PEs)
+    # compile each distinct body once.  PE objects keep their fns alive for the
+    # executor's lifetime, so id() keys are stable.
+
+    def _fire(self, name: str, kwargs: dict[str, Any]) -> Mapping[str, Any]:
+        """Call a PE body through the jit cache; eager fallback on failure."""
+        pe = self.graph.pes[name]
+        key = id(pe.fn)
+        if self._jit_ok.get(key, True):
+            fn = self._jit_fns.get(key)
+            if fn is None:
+                fn = self._jit_fns[key] = jax.jit(pe.fn)
+            try:
+                return fn(**kwargs)
+            except Exception:
+                self._jit_ok[key] = False
+        return pe.fn(**kwargs)
+
+    def _fire_batch(self, name: str, kwargs: dict[str, Any], B: int) -> Mapping[str, Any]:
+        """Fire one PE on B stacked input sets; vmap with per-item fallback."""
+        pe = self.graph.pes[name]
+        key = id(pe.fn)
+        if self._vmap_ok.get(key, True):
+            fn = self._vmap_fns.get(key)
+            if fn is None:
+                fn = self._vmap_fns[key] = jax.jit(jax.vmap(pe.fn))
+            try:
+                return fn(**kwargs)
+            except Exception:
+                self._vmap_ok[key] = False
+        items = [pe.fn(**{k: v[b] for k, v in kwargs.items()}) for b in range(B)]
+        return {p.name: np.stack([np.asarray(it[p.name]) for it in items])
+                for p in pe.outputs}
+
+    # -- packing -------------------------------------------------------------
+    @staticmethod
+    def _payload_segment(val: Any, slot: _MsgSlot, lead: tuple[int, ...] = ()) -> np.ndarray:
+        v = np.asarray(val)
+        if v.shape != lead + slot.shape or v.dtype != slot.dtype:
+            raise GraphError(
+                f"message {slot.src_pe}.{slot.src_port} -> {slot.dst_pe}.{slot.dst_port}: "
+                f"value {v.shape}/{v.dtype} violates contract {lead + slot.shape}/{slot.dtype}")
+        flat = np.ascontiguousarray(v).reshape(*lead, -1) if lead else \
+            np.ascontiguousarray(v).reshape(-1)
+        return flat.view(np.uint8).reshape(*lead, -1) if lead else flat.view(np.uint8)
 
     # ------------------------------------------------------------------
     def run(self, inputs: Mapping[str, Any], mode: str = "sim") -> tuple[dict[str, Any], NoCStats]:
         if mode == "direct":
             return self.graph.run(inputs), NoCStats()
-        assert mode == "sim"
+        if mode == "sim_python":
+            return self._run_sim_python(inputs)
+        assert mode == "sim", f"unknown mode {mode!r}"
+        mailbox: dict[tuple[str, str], Any] = {}
+        for k, v in inputs.items():
+            pe, port = k.split(".")
+            mailbox[(pe, port)] = np.asarray(v)
+        return self._run_compiled(mailbox, B=None)
+
+    def run_batch(self, inputs: Mapping[str, Any],
+                  mode: str = "sim") -> tuple[dict[str, Any], NoCStats]:
+        """Run B independent input sets at once; every input carries a leading
+        batch axis ``(B, *port.shape)`` and so does every output.
+
+        ``sim`` fires each PE once on the stacked batch (vmap, with a per-item
+        eager fallback) and moves all B message sets through the topology in a
+        single ``(B, n, n, bytes)`` :func:`simulate_schedule` call.  Stats:
+        waves/rounds are physical (counted once — the batch shares the
+        schedule), while payload/flit/link/cross-pod byte counters scale with
+        B (each input set's messages really occupy the links)."""
+        if not inputs:
+            raise GraphError("run_batch needs at least one input")
+        B = int(np.asarray(next(iter(inputs.values()))).shape[0])
+        if mode == "direct":
+            items = [self.graph.run({k: np.asarray(v)[b] for k, v in inputs.items()})
+                     for b in range(B)]
+            outs = {k: np.stack([np.asarray(it[k]) for it in items]) for k in items[0]}
+            return outs, NoCStats()
+        assert mode == "sim", f"unknown mode {mode!r}"
+        mailbox: dict[tuple[str, str], Any] = {}
+        for k, v in inputs.items():
+            pe, port = k.split(".")
+            arr = np.asarray(v)
+            if arr.shape[0] != B:
+                raise GraphError(f"input {k} batch axis {arr.shape[0]} != {B}")
+            mailbox[(pe, port)] = arr
+        return self._run_compiled(mailbox, B=B)
+
+    def _run_compiled(self, mailbox: dict[tuple[str, str], Any],
+                      B: Optional[int]) -> tuple[dict[str, Any], NoCStats]:
+        """Execute the compiled flit program; ``B=None`` single-set, else a
+        leading batch axis rides through every pack/route/unpack step."""
+        g, topo = self.graph, self.topo
+        n = topo.n_nodes
+        lead = () if B is None else (B,)
+        scale = 1 if B is None else B
+        stats = NoCStats()
+        for wave, prog in zip(self.waves, self.programs):
+            stats.waves += 1
+            for name in wave:
+                pe = g.pes[name]
+                kwargs = {p.name: mailbox[(name, p.name)] for p in pe.inputs}
+                results = (self._fire(name, kwargs) if B is None
+                           else self._fire_batch(name, kwargs, B))
+                for p in pe.outputs:
+                    mailbox[(name, p.name)] = np.asarray(results[p.name])
+            if not prog.slots:
+                continue
+            payload = np.empty(lead + (prog.payload_nbytes,), np.uint8)
+            for slot in prog.slots:
+                payload[..., slot.a:slot.b] = self._payload_segment(
+                    mailbox[(slot.src_pe, slot.src_port)], slot, lead)
+            msgs_arr = np.zeros(lead + (n * n * prog.buf_bytes,), np.uint8)
+            msgs_arr[..., prog.pack_idx] = payload
+            delivered, sstats = simulate_schedule(
+                topo, msgs_arr.reshape(lead + (n, n, prog.buf_bytes)),
+                batched=B is not None)
+            recv = delivered.reshape(lead + (-1,))[..., prog.gather_idx]
+            for slot in prog.slots:
+                seg = recv[..., slot.a:slot.b].copy()   # owns + aligns the bytes
+                mailbox[(slot.dst_pe, slot.dst_port)] = (
+                    seg.view(slot.dtype).reshape(lead + slot.shape))
+            # prog.static only carries per-message counters (waves/rounds/
+            # link_bytes stay zero there), so the whole struct scales by B
+            for f in dataclasses.fields(NoCStats):
+                setattr(stats, f.name,
+                        getattr(stats, f.name) + scale * getattr(prog.static, f.name))
+            stats.rounds += sstats.rounds
+            stats.link_bytes += sstats.link_bytes
+        outs = {f"{pe}.{port.name}": mailbox[(pe, port.name)] for pe, port in g.graph_outputs()}
+        return outs, stats
+
+    # ------------------------------------------------------------------
+    def _run_sim_python(self, inputs: Mapping[str, Any]) -> tuple[dict[str, Any], NoCStats]:
+        """The seed per-message reference loop (framing re-derived every wave).
+
+        Kept verbatim as the baseline the compiled engine is benchmarked and
+        property-tested against."""
         g, topo, cfg = self.graph, self.topo, self.cfg
         stats = NoCStats()
         mailbox: dict[tuple[str, str], Any] = {}
         for k, v in inputs.items():
             pe, port = k.split(".")
             mailbox[(pe, port)] = np.asarray(v)
-
-        chan_by_src: dict[str, list] = {n: [] for n in g.pes}
-        for c in g.channels:
-            chan_by_src[c.src_pe].append(c)
 
         pod_of = None
         if self.plan is not None:
@@ -143,7 +391,7 @@ class NoCExecutor:
                 results = pe.fn(**kwargs)
                 for p in pe.outputs:
                     mailbox[(name, p.name)] = np.asarray(results[p.name])
-                for c in chan_by_src[name]:
+                for c in self._chan_by_src[name]:
                     val = np.asarray(results[c.src_port])
                     outbox.append((val, self.placement[c.src_pe], self.placement[c.dst_pe],
                                    c.dst_pe, c.dst_port))
@@ -192,8 +440,7 @@ class NoCExecutor:
         outs: dict[str, Any] = {}
         for _ in range(n_iters):
             outs, st = self.run(state, mode=mode)
-            for f in dataclasses.fields(NoCStats):
-                setattr(total, f.name, getattr(total, f.name) + getattr(st, f.name))
+            total.add(st)
             for src, dst in feedback:
                 state[dst] = outs[src]
         return outs, total

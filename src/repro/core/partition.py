@@ -18,6 +18,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Mapping, Optional, Sequence
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 from jax import lax
@@ -87,6 +89,144 @@ def placement_cost(graph: TaskGraph, topo: Topology, placement: Mapping[str, int
         b * topo.hops(placement[a], placement[c])
         for (a, c), b in graph.traffic_bytes().items()
     )
+
+
+def optimize_placement(graph: TaskGraph, topo: Topology,
+                       pod_of_node: Optional[Sequence[int]] = None,
+                       init: Optional[Mapping[str, int]] = None,
+                       iters: int = 2000, seed: int = 0,
+                       w_cut: float = 1.0,
+                       max_per_node: Optional[int] = None) -> dict[str, int]:
+    """Annealing/KL-style placement search (the paper places by hand; this is
+    the automated analog).
+
+    Minimizes ``placement_cost`` (Σ traffic × hops) plus — when a node→pod
+    assignment is given — ``w_cut`` × the bytes that would cross the pod cut
+    (each cross-pod byte pays for a quasi-SERDES traversal).  Moves are single
+    PE relocations and PE↔PE swaps; acceptance is simulated annealing with a
+    geometric cooling schedule, deterministic under ``seed``.  Incremental
+    delta evaluation touches only the moved PEs' channels, so a step is O(deg)
+    not O(E) — cheap enough to run per app graph at executor-build time.
+
+    ``max_per_node`` caps router occupancy (the paper's NoC wraps one PE per
+    router); default is the balanced occupancy ``ceil(n_pes / n_nodes)`` — 1
+    when PEs fit — so the search cannot game the hop objective by stacking
+    every PE on one node.
+    """
+    rng = np.random.default_rng(seed)
+    names = list(graph.pes)
+    n = topo.n_nodes
+    if max_per_node is None:
+        max_per_node = -(-len(names) // n)
+
+    def occupancy(p):
+        o: dict[int, int] = {}
+        for node in p.values():
+            o[node] = o.get(node, 0) + 1
+        return o
+
+    if init is not None:
+        placement = dict(init)
+    else:
+        # greedy seed when it respects capacity; round-robin (always balanced)
+        # otherwise — greedy's both-unplaced fallback can stack node 0 when
+        # PEs far outnumber nodes
+        placement = place_greedy(graph, topo)
+        if max(occupancy(placement).values(), default=0) > max_per_node:
+            placement = place_round_robin(graph, topo)
+    occ = occupancy(placement)
+    if max(occ.values(), default=0) > max_per_node:
+        raise ValueError(f"initial placement exceeds max_per_node={max_per_node}: "
+                         f"occupancy {occ}")
+    # symmetric traffic adjacency: pe -> [(other_pe, bytes)]
+    adj: dict[str, list[tuple[str, int]]] = {p: [] for p in names}
+    for (a, b), by in graph.traffic_bytes().items():
+        if a != b:
+            adj[a].append((b, by))
+            adj[b].append((a, by))
+
+    def local(pe: str, node: int) -> float:
+        c = 0.0
+        for other, by in adj[pe]:
+            o = node if other == pe else placement[other]
+            c += by * topo.hops(node, o)
+            if pod_of_node is not None and pod_of_node[node] != pod_of_node[o]:
+                c += w_cut * by
+        return c
+
+    def total() -> float:
+        c = float(placement_cost(graph, topo, placement))
+        if pod_of_node is not None:
+            for (a, b), by in graph.traffic_bytes().items():
+                if pod_of_node[placement[a]] != pod_of_node[placement[b]]:
+                    c += w_cut * by
+        return c
+
+    cost = total()
+    best_cost, best = cost, dict(placement)
+    t0 = max(cost / max(len(names), 1), 1.0)
+    t_end = t0 / 1000.0
+    for it in range(iters):
+        temp = t0 * (t_end / t0) ** (it / max(iters - 1, 1))
+        if rng.random() < 0.5 or len(names) < 2:
+            # relocate one PE to a random node with free capacity
+            pe = names[int(rng.integers(len(names)))]
+            old_node = placement[pe]
+            new_node = int(rng.integers(n))
+            if new_node == old_node or occ.get(new_node, 0) >= max_per_node:
+                continue
+            before = local(pe, old_node)
+            placement[pe] = new_node
+            delta = local(pe, new_node) - before
+            if delta <= 0 or rng.random() < np.exp(-delta / temp):
+                cost += delta
+                occ[old_node] -= 1
+                occ[new_node] = occ.get(new_node, 0) + 1
+            else:
+                placement[pe] = old_node
+        else:
+            # swap two PEs' nodes (KL-style exchange)
+            i, j = rng.choice(len(names), size=2, replace=False)
+            p, q = names[int(i)], names[int(j)]
+            np_, nq = placement[p], placement[q]
+            if np_ == nq:
+                continue
+            before = local(p, np_) + local(q, nq)
+            placement[p], placement[q] = nq, np_
+            delta = (local(p, nq) + local(q, np_)) - before
+            if delta <= 0 or rng.random() < np.exp(-delta / temp):
+                cost += delta
+            else:
+                placement[p], placement[q] = np_, nq
+        if cost < best_cost - 1e-9:
+            best_cost, best = cost, dict(placement)
+    return best
+
+
+def resolve_placement(graph: TaskGraph, topo: Topology, spec="rr",
+                      pod_of_node: Optional[Sequence[int]] = None,
+                      seed: int = 0) -> dict[str, int]:
+    """Turn a placement spec into a PE→node map.
+
+    ``spec`` is one of ``"rr"`` (round-robin), ``"greedy"``, ``"opt"``
+    (annealing search, see :func:`optimize_placement`) or an explicit
+    mapping, which is passed through."""
+    if isinstance(spec, Mapping):
+        missing = set(graph.pes) - set(spec)
+        if missing:
+            raise ValueError(f"placement mapping is missing PEs {sorted(missing)}")
+        bad = {p: n for p, n in spec.items() if not 0 <= n < topo.n_nodes}
+        if bad:
+            raise ValueError(f"placement mapping has out-of-range nodes {bad} "
+                             f"(topology has {topo.n_nodes} nodes)")
+        return dict(spec)
+    if spec == "rr":
+        return place_round_robin(graph, topo)
+    if spec == "greedy":
+        return place_greedy(graph, topo)
+    if spec == "opt":
+        return optimize_placement(graph, topo, pod_of_node=pod_of_node, seed=seed)
+    raise ValueError(f"unknown placement spec {spec!r}; use 'rr'|'greedy'|'opt' or a mapping")
 
 
 # ---------------------------------------------------------------------------
@@ -217,10 +357,17 @@ def constrain(x: jax.Array, axes: Sequence[Optional[str]],
     """with_sharding_constraint by logical axes (no-op outside jit/mesh);
     shape-aware: unshardable dims stay replicated."""
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        from ..compat import MODERN_SHARD_MAP, get_abstract_mesh, manual_axes_in_scope
+        mesh = get_abstract_mesh()
         if mesh is None or not mesh.axis_names:
             return x
-        spec = logical_to_spec(axes, rules, mesh.axis_names, dims=x.shape,
+        manual = manual_axes_in_scope()
+        if manual and not MODERN_SHARD_MAP:
+            return x  # constraint hints inside partial-manual regions crash old XLA
+        usable = tuple(a for a in mesh.axis_names if a not in manual)
+        if not usable:
+            return x
+        spec = logical_to_spec(axes, rules, usable, dims=x.shape,
                                mesh_shape=dict(mesh.shape))
         return jax.lax.with_sharding_constraint(x, spec)
     except Exception:

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..compat import axis_size
 from .topology import FatTree, Mesh2D, Ring, Topology, Torus2D
 
 
@@ -54,7 +55,7 @@ def _put(out: jax.Array, src, val: jax.Array, valid) -> jax.Array:
 
 def ring_all_to_all_unidir(x: jax.Array, axis_name: str) -> jax.Array:
     """Paper-faithful unidirectional ring rotation: n-1 rounds."""
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     i = lax.axis_index(axis_name)
     me = lax.dynamic_index_in_dim(x, i, 0, keepdims=False)
     out = _put(jnp.zeros_like(x), i, me, True)
@@ -71,7 +72,7 @@ def ring_all_to_all_unidir(x: jax.Array, axis_name: str) -> jax.Array:
 def line_all_to_all(x: jax.Array, axis_name: str, wrap: bool) -> jax.Array:
     """Bidirectional 1D exchange.  wrap=True → torus ring (⌈n/2⌉-ish rounds,
     both directions concurrently); wrap=False → mesh line (n-1 rounds)."""
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     i = lax.axis_index(axis_name)
     me = lax.dynamic_index_in_dim(x, i, 0, keepdims=False)
     out = _put(jnp.zeros_like(x), i, me, True)
@@ -98,8 +99,8 @@ def grid_all_to_all(x: jax.Array, axis_x: str, axis_y: str, wrap: bool) -> jax.A
     """Factorized 2D exchange (dimension-ordered routing, like XY routing in
     the paper's mesh/torus NoCs).  ``x``: (n, *chunk), destination linear index
     d = dy*rx + dx;  returns source-linear-indexed result."""
-    rx = lax.axis_size(axis_x)
-    ry = lax.axis_size(axis_y)
+    rx = axis_size(axis_x)
+    ry = axis_size(axis_y)
     c = x.shape[1:]
     b = x.reshape(ry, rx, *c)          # (dy, dx, *c)
     b = jnp.moveaxis(b, 1, 0)          # (dx, dy, *c)
@@ -199,10 +200,22 @@ def _sim_ring_unidir(buf: np.ndarray, stats: ScheduleStats) -> np.ndarray:
     return out
 
 
-def simulate_schedule(topo: Topology, msgs: np.ndarray) -> tuple[np.ndarray, ScheduleStats]:
+def simulate_schedule(topo: Topology, msgs: np.ndarray, *,
+                      batched: bool = False) -> tuple[np.ndarray, ScheduleStats]:
     """msgs: (n_src, n_dst, *c).  Returns (delivered (n_dst, n_src, *c), stats).
 
-    Semantics oracle: delivered == msgs.swapaxes(0, 1)."""
+    Semantics oracle: delivered == msgs.swapaxes(0, 1).
+
+    With ``batched=True`` msgs carries a leading batch axis ``(B, n, n, *c)``
+    and B independent message sets move through the topology in ONE
+    round-by-round simulation (the batch rides along as payload, so rounds are
+    counted once while link_bytes scales with B).  Returns ``(B, n, n, *c)``
+    delivered, i.e. ``msgs.swapaxes(1, 2)``."""
+    if batched:
+        assert msgs.ndim >= 3, "batched msgs must be (B, n_src, n_dst, *c)"
+        inner = np.ascontiguousarray(np.moveaxis(msgs, 0, 2))   # (n, n, B, *c)
+        delivered, stats = simulate_schedule(topo, inner)
+        return np.ascontiguousarray(np.moveaxis(delivered, 2, 0)), stats
     n = topo.n_nodes
     assert msgs.shape[0] == n and msgs.shape[1] == n
     stats = ScheduleStats()

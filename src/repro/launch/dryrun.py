@@ -32,7 +32,7 @@ import jax
 from ..configs import ALL_ARCHS, SHAPES, cell_supported, get_config, input_specs
 from ..optim import AdamWConfig
 from . import roofline as RL
-from .mesh import make_production_mesh
+from .mesh import make_production_mesh, set_mesh
 from .steps import jit_decode, jit_prefill, jit_train_step
 
 
@@ -123,7 +123,7 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
     else:
         rules_ctx = contextlib.nullcontext()
     try:
-        with jax.set_mesh(mesh), rules_ctx:
+        with set_mesh(mesh), rules_ctx:
             lowered = _lower_cell(cfg, shape, mesh, step_kw)
             t_lower = time.monotonic() - t0
             compiled = lowered.compile()

@@ -9,6 +9,15 @@ from __future__ import annotations
 import jax
 
 
+def set_mesh(mesh):
+    """Enter ``mesh`` as the ambient mesh, portably.
+
+    ``jax.set_mesh`` only exists on newer jax; on older versions a ``Mesh`` is
+    itself a context manager with the semantics the launch/serve/bench paths
+    need, so fall back to it."""
+    return jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips/pod (TPU v5e pod slice); 2 pods = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)

@@ -20,12 +20,12 @@ import jax.numpy as jnp
 from ..configs import get_config
 from ..models import transformer as T
 from ..models.layers import init_params
-from .mesh import make_host_mesh
+from .mesh import make_host_mesh, set_mesh
 
 
 def serve_batch(params, cfg, prompts: np.ndarray, gen: int, mesh) -> np.ndarray:
     B, S = prompts.shape
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         cache = T.init_cache(cfg, B, S + gen)
         batch = {"tokens": jnp.asarray(prompts)}
         if cfg.family == "encdec":

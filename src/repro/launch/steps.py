@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from ..configs.base import ModelConfig, ShapeConfig
 from ..core.partition import DEFAULT_RULES, cross_pod_mean, logical_to_spec
 from ..core.serdes import QuasiSerdesConfig
@@ -78,7 +79,7 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt_cfg: AdamWConfig,
             return l, mets, grads
 
         bspec = jax.tree.map(lambda _: P("pod"), batch)
-        return jax.shard_map(
+        return shard_map(
             pod_local, mesh=mesh,
             in_specs=(P(), bspec), out_specs=(P(), P(), P()),
             check_vma=False, axis_names={"pod"})(params, batch)

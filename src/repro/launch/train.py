@@ -26,7 +26,7 @@ from ..models import transformer as T
 from ..models.layers import init_params
 from ..optim import AdamWConfig, adamw_init
 from ..runtime import FTConfig, ResilientRunner
-from .mesh import make_host_mesh
+from .mesh import make_host_mesh, set_mesh
 from .steps import batch_shardings, make_train_step, shardings_for_params
 
 
@@ -38,7 +38,7 @@ def build_state(cfg, mesh, seed: int = 0):
     def init(key):
         return init_params(specs, key)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = jax.jit(init, out_shardings=psh)(jax.random.key(seed))
         opt = jax.jit(adamw_init, out_shardings=None)(params)
     return {"params": params, "opt": opt}
@@ -76,7 +76,7 @@ def run(argv=None):
                       seed=args.seed)
     pipeline = ShardedTokenPipeline(dcfg)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         jitted = jax.jit(step_fn, donate_argnums=(0,))
         losses = []
 

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from ..compat import get_abstract_mesh, shard_map
 from ..core.partition import constrain
 from .layers import ParamSpec
 
@@ -215,7 +216,7 @@ def moe_apply(params: dict, x: jax.Array, c: MoEConfig) -> tuple[jax.Array, jax.
     if c.impl == "dense":
         return dense_ref(params, x, c)
 
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or "model" not in (mesh.axis_names or ()):
         # no mesh context (unit tests / single host): run the oracle
         return dense_ref(params, x, c)
@@ -249,7 +250,7 @@ def moe_apply(params: dict, x: jax.Array, c: MoEConfig) -> tuple[jax.Array, jax.
             out, (me, ce) = _gather_local(xl.reshape(T, d), wr, wg, wu, wd, c,
                                           n_ranks, "model")
             return out.reshape(xl.shape), _aux_of(me, ce, batch_axes)
-        sm = jax.shard_map(
+        sm = shard_map(
             fn, mesh=mesh,
             in_specs=(P(bspec, None, None), P(), wspec, wspec, wspec),
             out_specs=(P(bspec, None, None), P()),
@@ -262,7 +263,7 @@ def moe_apply(params: dict, x: jax.Array, c: MoEConfig) -> tuple[jax.Array, jax.
         xl2 = xl.reshape(-1, d)
         out, (me, ce) = _noc_local(xl2, wr, wg, wu, wd, c, n_ranks, "model")
         return out.reshape(xl.shape), _aux_of(me, ce, all_axes)
-    sm = jax.shard_map(
+    sm = shard_map(
         fn, mesh=mesh,
         in_specs=(P(bspec, "model", None), P(), wspec, wspec, wspec),
         out_specs=(P(bspec, "model", None), P()),

@@ -11,6 +11,7 @@ def test_moe_engines_agree_across_mesh():
     run_with_devices("""
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import Mesh
+from repro.launch.mesh import set_mesh
 from repro.models import moe as M
 from repro.models.layers import init_params
 mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
@@ -20,7 +21,7 @@ cfgs = {impl: M.MoEConfig(d_model=32, n_experts=8, top_k=2, d_ff=64,
         for impl in ("dense", "gather", "noc")}
 params = init_params(M.moe_specs(cfgs["dense"]), jax.random.key(0))
 x = jnp.asarray(rng.normal(size=(4, 16, 32)), jnp.float32)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     ref, aux_ref = M.moe_apply(params, x, cfgs["dense"])
     for impl in ("gather", "noc"):
         out, aux = M.moe_apply(params, x, cfgs[impl])
@@ -37,6 +38,7 @@ def test_moe_noc_ring_schedule():
     run_with_devices("""
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import Mesh
+from repro.launch.mesh import set_mesh
 from repro.models import moe as M
 from repro.models.layers import init_params
 mesh = Mesh(np.array(jax.devices()).reshape(1, 4), ("data", "model"))
@@ -45,7 +47,7 @@ dense = M.MoEConfig(32, 8, 2, 64, capacity_factor=8.0, impl="dense")
 ring = M.MoEConfig(32, 8, 2, 64, capacity_factor=8.0, impl="noc", noc_topology="ring")
 params = init_params(M.moe_specs(dense), jax.random.key(0))
 x = jnp.asarray(rng.normal(size=(2, 8, 32)), jnp.float32)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     ref, _ = M.moe_apply(params, x, dense)
     out, _ = M.moe_apply(params, x, ring)
 assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
@@ -62,6 +64,7 @@ import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import Mesh
 from repro.configs import get_config
 from repro.core.serdes import QuasiSerdesConfig
+from repro.launch.mesh import set_mesh
 from repro.launch.steps import make_train_step
 from repro.models import transformer as T
 from repro.models.layers import init_params
@@ -75,7 +78,7 @@ batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (8, 16)), jnp.int32),
          "labels": jnp.asarray(rng.integers(0, cfg.vocab, (8, 16)), jnp.int32)}
 opt = AdamWConfig(lr=1e-3)
 outs = {}
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     for name, kw in [("auto", dict(pod_sync="auto")),
                      ("serdes_none", dict(pod_sync="serdes",
                                           serdes=QuasiSerdesConfig(compress="none"))),
@@ -107,6 +110,7 @@ import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import Mesh
 from repro.checkpoint import CheckpointConfig, CheckpointManager
 from repro.configs import get_config
+from repro.launch.mesh import set_mesh
 from repro.launch.steps import make_train_step, shardings_for_params
 from repro.models import transformer as T
 from repro.models.layers import init_params
@@ -118,7 +122,7 @@ state = {{"params": params, "opt": adamw_init(params)}}
 rng = np.random.default_rng(0)
 batch = {{"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (8, 16)), jnp.int32),
          "labels": jnp.asarray(rng.integers(0, cfg.vocab, (8, 16)), jnp.int32)}}
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     step = jax.jit(make_train_step(cfg, mesh, AdamWConfig(lr=1e-3)))
     for _ in range(4):
         state, mets = step(state, batch)
@@ -131,6 +135,7 @@ import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import Mesh
 from repro.checkpoint import CheckpointConfig, CheckpointManager
 from repro.configs import get_config
+from repro.launch.mesh import set_mesh
 from repro.launch.steps import make_train_step, shardings_for_params
 from repro.models import transformer as T
 from repro.models.layers import init_params
@@ -149,7 +154,7 @@ assert step_no == 4
 rng = np.random.default_rng(0)
 batch = {{"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (8, 16)), jnp.int32),
          "labels": jnp.asarray(rng.integers(0, cfg.vocab, (8, 16)), jnp.int32)}}
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     step = jax.jit(make_train_step(cfg, mesh, AdamWConfig(lr=1e-3)))
     state, mets = step(state, batch)
 assert np.isfinite(float(mets["loss"]))

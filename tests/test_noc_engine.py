@@ -1,0 +1,209 @@
+"""Compiled flit-program engine: sim / run_batch / run_iterative must be
+bit-identical to the direct oracle on every topology and placement, stats must
+match the seed per-message loop, and NoCStats accounting is golden-pinned so
+flit/round bookkeeping can't silently drift."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (NoCConfig, NoCExecutor, cut, make_topology,
+                        optimize_placement, PE, place_greedy, place_round_robin,
+                        placement_cost, Port, simulate_schedule, TaskGraph)
+
+TOPOLOGIES = ["ring", "mesh", "torus", "fattree"]
+
+
+def _diamond_graph():
+    g = TaskGraph("diamond")
+    g.add(PE("src", lambda x: {"a": x + 1, "b": x * 3}, (Port("x", (4,)),),
+             (Port("a", (4,)), Port("b", (4,)))))
+    g.add(PE("l", lambda a: {"o": a * a}, (Port("a", (4,)),), (Port("o", (4,)),)))
+    g.add(PE("r", lambda b: {"o": b - 2}, (Port("b", (4,)),), (Port("o", (4,)),)))
+    g.add(PE("join", lambda l, r: {"out": l + r},
+             (Port("l", (4,)), Port("r", (4,))), (Port("out", (4,)),)))
+    g.connect("src.a", "l.a")
+    g.connect("src.b", "r.b")
+    g.connect("l.o", "join.l")
+    g.connect("r.o", "join.r")
+    return g
+
+
+def _mixed_dtype_graph():
+    """Exercise non-float32 contracts through the byte-level framing."""
+    g = TaskGraph("mixed")
+    g.add(PE("a", lambda x: {"i": (x * 2).astype(jnp.int32),
+                             "u": (x + 1).astype(jnp.uint8)},
+             (Port("x", (3,)),),
+             (Port("i", (3,), np.int32), Port("u", (3,), np.uint8))))
+    g.add(PE("b", lambda i: {"y": (i * i).astype(jnp.int32)},
+             (Port("i", (3,), np.int32),), (Port("y", (3,), np.int32),)))
+    g.add(PE("c", lambda u: {"z": (u + 3).astype(jnp.uint8)},
+             (Port("u", (3,), np.uint8),), (Port("z", (3,), np.uint8),)))
+    g.connect("a.i", "b.i")
+    g.connect("a.u", "c.u")
+    return g
+
+
+def _random_placement(g, n_nodes, seed):
+    rng = np.random.default_rng(seed)
+    return {name: int(rng.integers(0, n_nodes)) for name in g.pes}
+
+
+def _check_modes_match(topo_name, seed, n_nodes=6):
+    g = _diamond_graph()
+    inp = {"src.x": jnp.arange(4.0)}
+    topo = make_topology(topo_name, n_nodes)
+    placement = _random_placement(g, n_nodes, seed)
+    pods = list(np.random.default_rng(seed + 1).integers(0, 2, n_nodes))
+    plan = cut(g, placement, pods)
+    ex = NoCExecutor(g, topo, placement=placement, plan=plan)
+    direct = g.run(inp)
+    sim, st_sim = ex.run(inp, mode="sim")
+    legacy, st_leg = ex.run(inp, mode="sim_python")
+    for k in direct:
+        assert np.array_equal(np.asarray(sim[k]), np.asarray(direct[k])), (topo_name, k)
+        assert np.array_equal(np.asarray(legacy[k]), np.asarray(sim[k])), (topo_name, k)
+    # the engine's stats must equal the seed per-message loop's, field for field
+    assert st_sim.as_dict() == st_leg.as_dict()
+    # batched: B stacked input sets == B direct runs, bit for bit
+    B = 3
+    binp = {"src.x": np.stack([np.arange(4.0) * (b + 1) for b in range(B)])}
+    bouts, st_b = ex.run_batch(binp)
+    for b in range(B):
+        d = g.run({"src.x": jnp.asarray(binp["src.x"][b])})
+        for k in d:
+            assert np.array_equal(bouts[k][b], np.asarray(d[k])), (topo_name, b, k)
+    assert st_b.rounds == st_sim.rounds and st_b.waves == st_sim.waves
+    assert st_b.payload_bytes == B * st_sim.payload_bytes
+    assert st_b.flits == B * st_sim.flits
+
+
+@pytest.mark.parametrize("topo_name", TOPOLOGIES)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_engine_modes_bit_identical(topo_name, seed):
+    _check_modes_match(topo_name, seed)
+
+
+@given(st.sampled_from(TOPOLOGIES), st.integers(0, 1000))
+@settings(max_examples=16, deadline=None)
+def test_engine_modes_bit_identical_property(topo_name, seed):
+    """sim == run_batch == direct across topologies × random placements."""
+    _check_modes_match(topo_name, seed)
+
+
+@pytest.mark.parametrize("topo_name", TOPOLOGIES)
+def test_mixed_dtype_contracts_roundtrip(topo_name):
+    g = _mixed_dtype_graph()
+    inp = {"a.x": jnp.arange(3.0)}
+    ex = NoCExecutor(g, make_topology(topo_name, 4))
+    direct = g.run(inp)
+    sim, _ = ex.run(inp, mode="sim")
+    for k in direct:
+        assert np.asarray(sim[k]).dtype == np.asarray(direct[k]).dtype
+        assert np.array_equal(np.asarray(sim[k]), np.asarray(direct[k]))
+
+
+def test_iterative_reuses_compiled_program():
+    """run_iterative over the compiled engine == direct-mode iteration."""
+    g = _diamond_graph()
+    # feedback: join.out -> src.x (shape-compatible loop)
+    feedback = [("join.out", "src.x")]
+    inp = {"src.x": jnp.arange(4.0)}
+    ex = NoCExecutor(g, make_topology("torus", 4))
+    out_d, _ = ex.run_iterative(inp, feedback, 4, mode="direct")
+    out_s, st = ex.run_iterative(inp, feedback, 4, mode="sim")
+    out_l, st_l = ex.run_iterative(inp, feedback, 4, mode="sim_python")
+    for k in out_d:
+        assert np.array_equal(np.asarray(out_s[k]), np.asarray(out_d[k]))
+        assert np.array_equal(np.asarray(out_s[k]), np.asarray(out_l[k]))
+    assert st.as_dict() == st_l.as_dict()
+    assert st.waves == 4 * 3  # program re-used every iteration
+
+
+def test_simulate_schedule_batched_oracle(rng):
+    for name, n in [("ring", 5), ("mesh", 6), ("torus", 8), ("fattree", 7)]:
+        topo = make_topology(name, n)
+        msgs = rng.integers(0, 255, (3, n, n, 4)).astype(np.uint8)
+        delivered, stats = simulate_schedule(topo, msgs, batched=True)
+        assert np.array_equal(delivered, msgs.swapaxes(1, 2)), name
+        for b in range(3):
+            db, _ = simulate_schedule(topo, msgs[b])
+            assert np.array_equal(delivered[b], db), (name, b)
+
+
+# ---------------------------------------------------------------------------
+# golden NoCStats regression — flit/round accounting must not silently drift.
+# Stats are value-independent (static contracts), so fixed graphs pin them.
+# ---------------------------------------------------------------------------
+
+def test_golden_stats_ldpc_fano():
+    from repro.apps import ldpc
+
+    rng = np.random.default_rng(0)
+    llr = ldpc.awgn_llr(np.zeros(7, np.int8), 3.0, rng)
+    _, _, st = ldpc.decode_on_noc(ldpc.fano_plane_H(), llr, 10)
+    assert st.as_dict() == dict(
+        waves=20, rounds=60, link_bytes=92160, payload_bytes=840, flits=420,
+        cross_pod_msgs=0, cross_pod_wire_bytes=0, cross_pod_beats=0)
+
+
+def test_golden_stats_bmvm():
+    from repro.apps import bmvm
+
+    rng = np.random.default_rng(0)
+    cfg = bmvm.BMVMConfig(n=64, k=8, fold=2)
+    A = rng.integers(0, 2, (64, 64)).astype(np.uint8)
+    v = rng.integers(0, 2, (64,)).astype(np.uint8)
+    lut = bmvm.preprocess(A, cfg)
+    out, st = bmvm.iterate_noc_sim(jnp.asarray(lut), v, cfg, 2, topology="mesh")
+    assert np.array_equal(out.reshape(1, -1), bmvm.software_ref(A, v[None], 2))
+    assert st.as_dict() == dict(
+        waves=4, rounds=8, link_bytes=5632, payload_bytes=256, flits=128,
+        cross_pod_msgs=0, cross_pod_wire_bytes=0, cross_pod_beats=0)
+
+
+# ---------------------------------------------------------------------------
+# placement search
+# ---------------------------------------------------------------------------
+
+def test_optimize_placement_beats_baselines():
+    from repro.apps import ldpc
+
+    g, _ = ldpc.build_ldpc_graph(ldpc.fano_plane_H())
+    topo = make_topology("mesh", 16)
+    rr = placement_cost(g, topo, place_round_robin(g, topo))
+    gr = placement_cost(g, topo, place_greedy(g, topo))
+    opt = optimize_placement(g, topo, iters=1500, seed=0)
+    assert set(opt) == set(g.pes)
+    assert all(0 <= v < topo.n_nodes for v in opt.values())
+    assert placement_cost(g, topo, opt) <= min(rr, gr)
+    # one PE per router (14 PEs fit on 16 nodes): the search must not game the
+    # hop objective by stacking PEs on one node
+    assert len(set(opt.values())) == len(opt)
+
+
+def test_optimize_placement_cut_aware():
+    from repro.apps import ldpc
+
+    g, _ = ldpc.build_ldpc_graph(ldpc.fano_plane_H())
+    topo = make_topology("mesh", 16)
+    pods = [0] * 8 + [1] * 8
+    opt = optimize_placement(g, topo, pod_of_node=pods, iters=1500, seed=0)
+    cb_rr = cut(g, place_round_robin(g, topo), pods).cut_bytes(g)
+    cb_opt = cut(g, opt, pods).cut_bytes(g)
+    assert cb_opt <= cb_rr
+    # and the executor still produces oracle-identical results on it
+    rng = np.random.default_rng(0)
+    llr = ldpc.awgn_llr(np.zeros(7, np.int8), 4.0, rng)
+    bits, _, _ = ldpc.decode_on_noc(ldpc.fano_plane_H(), llr, 10,
+                                    pods=pods, placement=opt)
+    assert not bits.any()
+
+
+def test_noc_config_serdes_not_shared():
+    """default_factory: each NoCConfig gets its own QuasiSerdesConfig."""
+    a, b = NoCConfig(), NoCConfig()
+    assert a.serdes == b.serdes
+    assert a.serdes is not b.serdes
