@@ -123,11 +123,13 @@ def build_bmvm_graph(lut_np: np.ndarray, cfg: BMVMConfig) -> tuple[TaskGraph, li
 
 def iterate_noc_sim(lut: jax.Array, v_bits: np.ndarray, cfg: BMVMConfig, r: int,
                     topology: Optional[str] = None, n_nodes: Optional[int] = None,
-                    placement="rr"):
+                    placement="rr", mode: str = "sim"):
     """(decoded vector, NoCStats) — the Table-V measurement path.
 
     ``placement``: 'rr' | 'greedy' | 'opt' (annealing search) or an explicit
-    PE→node mapping."""
+    PE→node mapping.  ``mode``: any `NoCExecutor.run` mode — ``"spmd"`` runs
+    the same compiled flit program over a device mesh (needs n_nodes
+    devices)."""
     topo_name = topology or cfg.topology
     n_nodes = n_nodes or 2 * cfg.n_pe
     g, feedback = build_bmvm_graph(np.asarray(lut), cfg)
@@ -137,7 +139,7 @@ def iterate_noc_sim(lut: jax.Array, v_bits: np.ndarray, cfg: BMVMConfig, r: int,
     vw = np.asarray(kref.gf2_pack_vector(jnp.asarray(v1), cfg.k), np.uint32)
     f = cfg.fold
     inputs = {f"lut{i}.v": vw[i * f:(i + 1) * f] for i in range(cfg.n_pe)}
-    outs, stats = ex.run_iterative(inputs, feedback, r)
+    outs, stats = ex.run_iterative(inputs, feedback, r, mode=mode)
     out_w = np.concatenate([np.asarray(outs[f"acc{i}.v"]) for i in range(cfg.n_pe)])
     return np.asarray(kref.gf2_unpack_vector(jnp.asarray(out_w), cfg.k)), stats
 

@@ -147,13 +147,14 @@ def build_ldpc_graph(H: np.ndarray) -> tuple[TaskGraph, list[tuple[str, str]]]:
 def decode_on_noc(H: np.ndarray, llr: np.ndarray, n_iters: int,
                   topology: str = "mesh", n_nodes: int = 16,
                   pods: Optional[list[int]] = None,
-                  placement="rr"):
+                  placement="rr", mode: str = "sim"):
     """Full paper flow: graph -> placement -> (optional 2-pod cut) -> sim.
 
     ``placement``: 'rr' | 'greedy' | 'opt' (annealing search, cut-aware when
     ``pods`` is given) or an explicit PE→node mapping.  Initial check inputs
     are the channel LLRs of the connected bits (the standard initialization
-    u_ij^{(0)} = llr_j)."""
+    u_ij^{(0)} = llr_j).  ``mode``: any `NoCExecutor.run` mode — ``"spmd"``
+    moves the messages over a real device mesh (needs n_nodes devices)."""
     g, feedback = build_ldpc_graph(H)
     topo = make_topology(topology, n_nodes)
     placement = resolve_placement(g, topo, placement, pod_of_node=pods)
@@ -168,7 +169,7 @@ def decode_on_noc(H: np.ndarray, llr: np.ndarray, n_iters: int,
     for c in range(M):
         for j_c, b in enumerate(np.nonzero(H[c])[0]):
             inputs[f"chk{c}.u{j_c}"] = jnp.asarray(llr[b:b + 1], jnp.float32)
-    outs, stats = ex.run_iterative(inputs, feedback, n_iters)
+    outs, stats = ex.run_iterative(inputs, feedback, n_iters, mode=mode)
     post = np.array([float(outs[f"bit{b}.post"][0]) for b in range(N)])
     return (post < 0).astype(np.int8), post, stats
 

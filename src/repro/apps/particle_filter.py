@@ -155,10 +155,12 @@ def build_pf_graph(cfg: PFConfig, n_pe: int) -> TaskGraph:
 
 def track_on_noc(frames: np.ndarray, cfg: PFConfig, n_pe: int = 4,
                  topology: str = "mesh", n_nodes: int = 8,
-                 placement="rr"):
+                 placement="rr", mode: str = "sim"):
     """Paper-faithful NoC execution; returns (centers, total NoCStats).
 
-    ``placement``: 'rr' | 'greedy' | 'opt' or an explicit PE→node mapping."""
+    ``placement``: 'rr' | 'greedy' | 'opt' or an explicit PE→node mapping.
+    ``mode``: any `NoCExecutor.run` mode — ``"spmd"`` routes each frame's
+    messages over a real device mesh (needs n_nodes devices)."""
     g = build_pf_graph(cfg, n_pe)
     topo = make_topology(topology, n_nodes)
     ex = NoCExecutor(g, topo, placement=resolve_placement(g, topo, placement))
@@ -181,7 +183,7 @@ def track_on_noc(frames: np.ndarray, cfg: PFConfig, n_pe: int = 4,
             inputs[f"pe{i}.bins"] = bins[i * per:(i + 1) * per]
             inputs[f"pe{i}.ref"] = ref
             inputs[f"pe{i}.parts"] = parts[i * per:(i + 1) * per]
-        outs, stats = ex.run(inputs)
+        outs, stats = ex.run(inputs, mode=mode)
         c = jnp.asarray(outs["root.center"])
         centers.append(np.asarray(c))
         if total_stats is None:

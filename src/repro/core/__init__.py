@@ -10,15 +10,18 @@ noc        — the executor + flit accounting (Tables I–V analogs)
 from .graph import PE, Channel, GraphError, Port, TaskGraph
 from .noc import NoCConfig, NoCExecutor, NoCStats, wrapper_overhead
 from .partition import (DEFAULT_RULES, PartitionPlan, constrain, cross_pod_mean, cut,
-                        logical_to_spec, named_sharding, optimize_placement,
-                        place_greedy, place_round_robin, placement_cost,
-                        resolve_placement)
-from .routing import (all_to_all_for, crossbar_all_to_all, grid_all_to_all,
-                      line_all_to_all, ring_all_to_all_unidir, simulate_schedule,
-                      topology_axes, transpose_oracle)
+                        logical_to_spec, mesh_for_topology, named_sharding,
+                        node_device_coords, optimize_placement, place_greedy,
+                        place_round_robin, placement_cost,
+                        placement_to_device_coords, resolve_placement)
+from .routing import (RouteProgram, all_to_all_for, compile_routes,
+                      crossbar_all_to_all, grid_all_to_all, line_all_to_all,
+                      ring_all_to_all_unidir, route_program_stats,
+                      run_route_program, simulate_route_program,
+                      simulate_schedule, topology_axes, transpose_oracle)
 from .serdes import (LinkMeta, QuasiSerdesConfig, compression_ratio, decode, encode,
                      link_bytes_on_wire, plan, send_over_link)
-from .topology import (FatTree, Mesh2D, Ring, Topology, Torus2D, compare,
-                       make_topology)
+from .topology import (AxisSchedule, FatTree, Mesh2D, Ring, Topology, Torus2D,
+                       bwd_pairs, compare, fwd_pairs, make_topology)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -6,18 +6,34 @@ phase-1 (`core.graph`) are placed on a CONNECT-style topology
 (`core.routing`), and cut links go through quasi-SERDES endpoints
 (`core.serdes` via `core.partition`).
 
-Execution modes
----------------
+Execution modes — the three contracts
+-------------------------------------
 * ``direct``     — `TaskGraph.run`; the pure-software oracle (the paper's
-  "multithreaded message passing software version").
+  "multithreaded message passing software version").  No NoC, no stats.
 * ``sim``        — the compiled **flit-program engine**: fires PEs
   wave-by-wave and physically moves every message round-by-round through the
   topology schedule with one vectorized numpy scatter/gather per wave.
   Produces the NoCStats used by the Table-IV/V-style benchmarks, and — by
   construction — bit-identical outputs to ``direct`` (tested).
+* ``spmd``       — the **device-mesh execution** of the same compiled flit
+  program: each wave's (n, n, buf_bytes) message cube is sharded over a
+  device mesh (one NoC node per device, `partition.mesh_for_topology`) and
+  moved by the topology's compiled ppermute-round schedule
+  (`routing.compile_routes` / `run_route_program`) inside ``shard_map`` —
+  one ``lax.ppermute`` per hop, multi-hop topologies decomposed into per-hop
+  rounds, fat-tree as one fused ``lax.all_to_all``.  Outputs and NoCStats are
+  bit-identical to ``sim`` (differential-tested): rounds/link_bytes come from
+  `routing.route_program_stats`, which counts exactly what the round-by-round
+  simulator counts.  Requires ``n_nodes`` devices (fake CPU devices via
+  ``XLA_FLAGS=--xla_force_host_platform_device_count`` work).
 * ``sim_python`` — the original per-message reference loop (dict framing +
   ``tobytes``/``frombuffer`` per message).  Kept as the behavioral baseline
   the engine is benchmarked and property-tested against.
+
+The contract between the modes: ``direct`` defines values, ``sim`` defines
+values + flit/round accounting, ``spmd`` must reproduce both bit-for-bit while
+actually moving bytes between devices.  Every later scaling feature (MoE
+dispatch over the NoC, LM-scale placement) builds on that equivalence.
 
 The flit-program compile step
 -----------------------------
@@ -190,6 +206,11 @@ class NoCExecutor:
         self._jit_ok: dict[int, bool] = {}
         self._vmap_fns: dict[int, Any] = {}
         self._vmap_ok: dict[int, bool] = {}
+        # spmd lowering (mode="spmd") is built lazily on first use: it needs
+        # n_nodes real/fake devices, which sim-only runs must not require
+        self._route_prog = None
+        self._spmd_mesh = None
+        self._spmd_fn = None
 
     # -- compile -------------------------------------------------------------
     def _compile_wave(self, wave: list[str]) -> _WaveProgram:
@@ -266,6 +287,56 @@ class NoCExecutor:
         return {p.name: np.stack([np.asarray(it[p.name]) for it in items])
                 for p in pe.outputs}
 
+    # -- spmd lowering -------------------------------------------------------
+    def _ensure_spmd(self) -> None:
+        """Compile the topology schedule to a ppermute-round program and jit
+        the shard_map transport over the NoC device mesh (once per executor)."""
+        if self._spmd_fn is not None:
+            return
+        from jax.sharding import PartitionSpec as P
+
+        from ..compat import shard_map
+        from .partition import mesh_for_topology
+        from .routing import compile_routes, run_route_program
+
+        prog = self._route_prog = compile_routes(self.topo)
+        mesh = self._spmd_mesh = mesh_for_topology(self.topo)
+        n_lead = len(prog.axes)
+        names = tuple(a for a, _ in prog.axes)
+
+        def device_fn(local):
+            # local view: (1,)*n_lead + (n_dst, *payload) → route → same shape
+            x = local.reshape(local.shape[n_lead:])
+            return run_route_program(x, prog).reshape(local.shape)
+
+        sm = shard_map(device_fn, mesh=mesh, in_specs=P(*names),
+                       out_specs=P(*names), check_vma=False)
+        self._spmd_fn = jax.jit(sm)
+
+    def _route_spmd(self, msgs_arr: np.ndarray,
+                    B: Optional[int]) -> tuple[np.ndarray, ScheduleStats]:
+        """Move one wave's message cube through the device mesh.
+
+        msgs_arr: (n, n, buf) or (B, n, n, buf).  Same (delivered, stats)
+        contract as :func:`simulate_schedule` — the batch rides along as
+        payload bytes, so rounds are physical while link_bytes scale with B."""
+        from .routing import route_program_stats
+
+        self._ensure_spmd()
+        prog = self._route_prog
+        n = self.topo.n_nodes
+        sizes = tuple(s for _, s in prog.axes)
+        if B is None:
+            payload = msgs_arr.shape[2:]
+            cube = msgs_arr.reshape(sizes + (n,) + payload)
+        else:
+            payload = (B,) + msgs_arr.shape[3:]
+            cube = np.moveaxis(msgs_arr, 0, 2).reshape(sizes + (n,) + payload)
+        out = np.asarray(self._spmd_fn(cube)).reshape((n, n) + payload)
+        delivered = out if B is None else np.moveaxis(out, 2, 0)
+        return np.ascontiguousarray(delivered), route_program_stats(
+            prog, msgs_arr.nbytes)
+
     # -- packing -------------------------------------------------------------
     @staticmethod
     def _payload_segment(val: Any, slot: _MsgSlot, lead: tuple[int, ...] = ()) -> np.ndarray:
@@ -284,12 +355,14 @@ class NoCExecutor:
             return self.graph.run(inputs), NoCStats()
         if mode == "sim_python":
             return self._run_sim_python(inputs)
-        assert mode == "sim", f"unknown mode {mode!r}"
+        if mode not in ("sim", "spmd"):
+            raise GraphError(f"unknown mode {mode!r}; use "
+                             f"'direct'|'sim'|'spmd'|'sim_python'")
         mailbox: dict[tuple[str, str], Any] = {}
         for k, v in inputs.items():
             pe, port = k.split(".")
             mailbox[(pe, port)] = np.asarray(v)
-        return self._run_compiled(mailbox, B=None)
+        return self._run_compiled(mailbox, B=None, spmd=mode == "spmd")
 
     def run_batch(self, inputs: Mapping[str, Any],
                   mode: str = "sim") -> tuple[dict[str, Any], NoCStats]:
@@ -310,7 +383,8 @@ class NoCExecutor:
                      for b in range(B)]
             outs = {k: np.stack([np.asarray(it[k]) for it in items]) for k in items[0]}
             return outs, NoCStats()
-        assert mode == "sim", f"unknown mode {mode!r}"
+        if mode not in ("sim", "spmd"):
+            raise GraphError(f"unknown mode {mode!r}; use 'direct'|'sim'|'spmd'")
         mailbox: dict[tuple[str, str], Any] = {}
         for k, v in inputs.items():
             pe, port = k.split(".")
@@ -318,17 +392,26 @@ class NoCExecutor:
             if arr.shape[0] != B:
                 raise GraphError(f"input {k} batch axis {arr.shape[0]} != {B}")
             mailbox[(pe, port)] = arr
-        return self._run_compiled(mailbox, B=B)
+        return self._run_compiled(mailbox, B=B, spmd=mode == "spmd")
 
     def _run_compiled(self, mailbox: dict[tuple[str, str], Any],
-                      B: Optional[int]) -> tuple[dict[str, Any], NoCStats]:
+                      B: Optional[int],
+                      spmd: bool = False) -> tuple[dict[str, Any], NoCStats]:
         """Execute the compiled flit program; ``B=None`` single-set, else a
-        leading batch axis rides through every pack/route/unpack step."""
+        leading batch axis rides through every pack/route/unpack step.
+
+        ``spmd`` swaps the transport: the same per-wave message cube moves
+        through the compiled ppermute schedule on the device mesh instead of
+        the numpy round-by-round simulator.  Everything else — firing,
+        framing, stats accumulation — is shared, which is what makes the two
+        modes bit-identical by construction."""
         g, topo = self.graph, self.topo
         n = topo.n_nodes
         lead = () if B is None else (B,)
         scale = 1 if B is None else B
         stats = NoCStats()
+        if spmd:
+            self._ensure_spmd()     # fail fast if the mesh can't be built
         for wave, prog in zip(self.waves, self.programs):
             stats.waves += 1
             for name in wave:
@@ -346,9 +429,12 @@ class NoCExecutor:
                     mailbox[(slot.src_pe, slot.src_port)], slot, lead)
             msgs_arr = np.zeros(lead + (n * n * prog.buf_bytes,), np.uint8)
             msgs_arr[..., prog.pack_idx] = payload
-            delivered, sstats = simulate_schedule(
-                topo, msgs_arr.reshape(lead + (n, n, prog.buf_bytes)),
-                batched=B is not None)
+            cube = msgs_arr.reshape(lead + (n, n, prog.buf_bytes))
+            if spmd:
+                delivered, sstats = self._route_spmd(cube, B)
+            else:
+                delivered, sstats = simulate_schedule(topo, cube,
+                                                      batched=B is not None)
             recv = delivered.reshape(lead + (-1,))[..., prog.gather_idx]
             for slot in prog.slots:
                 seg = recv[..., slot.a:slot.b].copy()   # owns + aligns the bytes

@@ -230,6 +230,52 @@ def resolve_placement(graph: TaskGraph, topo: Topology, spec="rr",
 
 
 # ---------------------------------------------------------------------------
+# 1b. placement → device-mesh assignment (SPMD execution of the placed graph)
+# ---------------------------------------------------------------------------
+
+def mesh_for_topology(topo: Topology, devices: Optional[Sequence] = None) -> Mesh:
+    """Build the device mesh a topology's compiled routing schedule runs over.
+
+    Mesh axes follow ``core.routing.topology_axes`` (1D ``noc`` axis for
+    ring/fat-tree, ``(noc_y, noc_x)`` for mesh/torus), so NoC node ``i`` is
+    device ``i`` in mesh row-major order — the identity the spmd executor and
+    :func:`node_device_coords` rely on."""
+    from .routing import topology_axes
+
+    axes = topology_axes(topo)
+    shape = [s for _, s in axes]
+    need = int(np.prod(shape, dtype=np.int64))
+    devices = list(jax.devices()) if devices is None else list(devices)
+    if len(devices) < need:
+        raise RuntimeError(
+            f"topology {topo.name!r} needs {need} devices for SPMD execution, "
+            f"have {len(devices)}; run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need}")
+    return Mesh(np.array(devices[:need]).reshape(shape),
+                tuple(a for a, _ in axes))
+
+
+def node_device_coords(topo: Topology, node: int) -> dict[str, int]:
+    """Linear NoC node id → mesh-axis coordinates on ``mesh_for_topology``."""
+    from .topology import Mesh2D
+
+    if not 0 <= node < topo.n_nodes:
+        raise ValueError(f"node {node} out of range for {topo.n_nodes}-node topology")
+    if isinstance(topo, Mesh2D):
+        x, y = topo.coords(node)
+        return {"noc_y": y, "noc_x": x}
+    return {"noc": node}
+
+
+def placement_to_device_coords(placement: Mapping[str, int],
+                               topo: Topology) -> dict[str, dict[str, int]]:
+    """Map a PE→node placement (e.g. an ``optimize_placement`` result) onto
+    device coordinates of the SPMD mesh — which device each PE's messages
+    originate from when the schedule runs as a real collective program."""
+    return {pe: node_device_coords(topo, node) for pe, node in placement.items()}
+
+
+# ---------------------------------------------------------------------------
 # 2. cutting across pods
 # ---------------------------------------------------------------------------
 

@@ -24,8 +24,11 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+import dataclasses
+
 from ..compat import axis_size
-from .topology import FatTree, Mesh2D, Ring, Topology, Torus2D
+from .topology import (AxisSchedule, FatTree, Mesh2D, Ring, Topology, Torus2D,
+                       bwd_pairs, fwd_pairs)
 
 
 # ---------------------------------------------------------------------------
@@ -38,11 +41,11 @@ def transpose_oracle(x: jax.Array, axis_name: str) -> jax.Array:
 
 
 def _fwd_perm(n: int, wrap: bool) -> list[tuple[int, int]]:
-    return [(s, (s + 1) % n) for s in range(n) if wrap or s + 1 < n]
+    return list(fwd_pairs(n, wrap))
 
 
 def _bwd_perm(n: int, wrap: bool) -> list[tuple[int, int]]:
-    return [(s, (s - 1) % n) for s in range(n) if wrap or s - 1 >= 0]
+    return list(bwd_pairs(n, wrap))
 
 
 def _put(out: jax.Array, src, val: jax.Array, valid) -> jax.Array:
@@ -113,6 +116,213 @@ def grid_all_to_all(x: jax.Array, axis_x: str, axis_y: str, wrap: bool) -> jax.A
 def crossbar_all_to_all(x: jax.Array, axis_name: str) -> jax.Array:
     """Fat-tree / ideal crossbar: single fused all_to_all."""
     return lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0)
+
+
+# ---------------------------------------------------------------------------
+# schedule → ppermute-round compiler (hop decomposition)
+# ---------------------------------------------------------------------------
+#
+# A topology's all-to-all is compiled into an explicit, value-independent
+# :class:`RouteProgram`: a sequence of per-axis phases (dimension-ordered XY
+# routing), each decomposed into rounds of single-hop neighbor permutations.
+# Every round moves at most two rotating buffers (forward/backward direction)
+# one hop via ``lax.ppermute`` and commits the messages that have reached their
+# destination column, using static per-node source tables.  The same program
+# drives three interpreters:
+#
+# * :func:`run_route_program`      — inside ``shard_map`` on a device mesh
+#                                    (the NoC executor's ``mode="spmd"``);
+# * :func:`simulate_route_program` — pure numpy, round-by-round (property
+#                                    tests without devices);
+# * :func:`route_program_stats`    — analytic rounds/link-bytes, matching the
+#                                    round-by-round simulator exactly.
+
+@dataclasses.dataclass(frozen=True)
+class HopMove:
+    """One single-hop buffer rotation inside a round.
+
+    ``buf``       — which rotating buffer moves (0 = forward, 1 = backward);
+    ``perm``      — the ``lax.ppermute`` (src, dst) neighbor pairs;
+    ``src_table`` — per node ``i`` along the axis: the source node whose
+                    message addressed to ``i`` arrives with this hop
+                    (-1: nothing to commit at ``i``).
+    """
+
+    buf: int
+    perm: tuple[tuple[int, int], ...]
+    src_table: tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class PermuteRound:
+    """One synchronous NoC round: every node sends one buffer per link
+    direction concurrently (1 move for unidirectional, 2 for bidirectional)."""
+
+    moves: tuple[HopMove, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class LinePhase:
+    """Hop-decomposed all-to-all along one mesh axis."""
+
+    sched: AxisSchedule
+    rounds: tuple[PermuteRound, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteProgram:
+    """Compiled routing schedule of a topology's all-to-all exchange."""
+
+    topo_name: str
+    n_nodes: int
+    axes: tuple[tuple[str, int], ...]    # device-mesh axes (= topology_axes)
+    phases: tuple[LinePhase, ...]        # empty → fused crossbar all_to_all
+
+    @property
+    def fused(self) -> bool:
+        return not self.phases
+
+    @property
+    def n_rounds(self) -> int:
+        return 1 if self.fused else sum(len(p.rounds) for p in self.phases)
+
+
+def _compile_line_phase(sched: AxisSchedule) -> LinePhase:
+    n = sched.size
+    rounds = []
+    for t in range(1, max(sched.fwd_steps, sched.bwd_steps) + 1):
+        moves = []
+        if t <= sched.fwd_steps:
+            src = tuple((i - t) % n if sched.wrap else (i - t if i - t >= 0 else -1)
+                        for i in range(n))
+            moves.append(HopMove(0, sched.fwd_pairs(), src))
+        if t <= sched.bwd_steps:
+            src = tuple((i + t) % n if sched.wrap else (i + t if i + t < n else -1)
+                        for i in range(n))
+            moves.append(HopMove(1, sched.bwd_pairs(), src))
+        rounds.append(PermuteRound(tuple(moves)))
+    return LinePhase(sched, tuple(rounds))
+
+
+def compile_routes(topo: Topology) -> RouteProgram:
+    """Compile a topology's all-to-all into an explicit ppermute-round program."""
+    phases = tuple(_compile_line_phase(s) for s in topo.axis_schedules())
+    return RouteProgram(topo.name, topo.n_nodes, topology_axes(topo), phases)
+
+
+def _line_exchange_compiled(x: jax.Array, phase: LinePhase) -> jax.Array:
+    """Execute one compiled line phase on the per-device view (inside
+    shard_map): x is (n, *chunk) destination-indexed, returns source-indexed."""
+    sched = phase.sched
+    i = lax.axis_index(sched.axis)
+    me = lax.dynamic_index_in_dim(x, i, 0, keepdims=False)
+    out = _put(jnp.zeros_like(x), i, me, True)
+    bufs = [x, x]
+    for rnd in phase.rounds:
+        for mv in rnd.moves:
+            bufs[mv.buf] = lax.ppermute(bufs[mv.buf], sched.axis, list(mv.perm))
+            src = jnp.asarray(mv.src_table, jnp.int32)[i]
+            val = lax.dynamic_index_in_dim(bufs[mv.buf], i, 0, keepdims=False)
+            out = _put(out, src, val, src >= 0)
+    return out
+
+
+def run_route_program(x: jax.Array, prog: RouteProgram) -> jax.Array:
+    """Execute a compiled RouteProgram inside ``shard_map`` over ``prog.axes``.
+
+    Same contract as the handwritten schedules: ``x`` is the per-device
+    ``(n, *chunk)`` destination-indexed view; returns the source-indexed
+    ``(n, *chunk)`` received view (== :func:`transpose_oracle`)."""
+    if prog.fused:
+        return lax.all_to_all(x, prog.axes[0][0], split_axis=0, concat_axis=0)
+    if len(prog.phases) == 1:
+        return _line_exchange_compiled(x, prog.phases[0])
+    # 2D XY routing: factorized exchange, same data motion as grid_all_to_all
+    (_, ry), (_, rx) = prog.axes          # axes = (noc_y, noc_x)
+    phase_x, phase_y = prog.phases        # phases ordered X then Y
+    c = x.shape[1:]
+    b = x.reshape(ry, rx, *c)             # (dy, dx, *c)
+    b = jnp.moveaxis(b, 1, 0)             # (dx, dy, *c)
+    b = _line_exchange_compiled(b, phase_x)   # (sx, dy, *c)
+    b = jnp.moveaxis(b, 1, 0)             # (dy, sx, *c)
+    b = _line_exchange_compiled(b, phase_y)   # (sy, sx, *c)
+    return b.reshape(ry * rx, *c)         # source linear index sy*rx + sx
+
+
+def _np_line_compiled(buf: np.ndarray, phase: LinePhase,
+                      stats: "ScheduleStats") -> np.ndarray:
+    """Numpy interpreter of one compiled line phase (mirrors _sim_line)."""
+    n = phase.sched.size
+    out = np.zeros_like(buf)
+    for i in range(n):
+        out[i, i] = buf[i, i]
+    bufs = [buf.copy(), buf.copy()]
+    for rnd in phase.rounds:
+        stats.rounds += 1
+        for mv in rnd.moves:
+            cur = bufs[mv.buf]
+            nxt = np.zeros_like(cur)
+            for s, d in mv.perm:
+                nxt[d] = cur[s]
+                stats.link_bytes += cur[s].nbytes
+            bufs[mv.buf] = nxt
+            for i in range(n):
+                if mv.src_table[i] >= 0:
+                    out[i, mv.src_table[i]] = nxt[i, i]
+    return out
+
+
+def simulate_route_program(prog: RouteProgram,
+                           msgs: np.ndarray) -> tuple[np.ndarray, "ScheduleStats"]:
+    """Round-by-round numpy execution of a compiled program (no devices).
+
+    msgs: (n_src, n_dst, *c); returns (delivered (n_dst, n_src, *c), stats).
+    Must be bit-identical to :func:`simulate_schedule` on the same topology —
+    the compiled program and the handwritten simulator are two lowerings of
+    the same schedule."""
+    n = prog.n_nodes
+    assert msgs.shape[0] == n and msgs.shape[1] == n
+    stats = ScheduleStats()
+    if prog.fused:
+        return msgs.swapaxes(0, 1).copy(), route_program_stats(prog, msgs.nbytes)
+    if len(prog.phases) == 1:
+        return _np_line_compiled(msgs, prog.phases[0], stats), stats
+    (_, ry), (_, rx) = prog.axes
+    phase_x, phase_y = prog.phases
+    c = msgs.shape[2:]
+    m = msgs.reshape(ry, rx, ry, rx, *c)            # [sy, sx, dy, dx, *c]
+    b = np.moveaxis(m, (1, 3), (0, 1))              # [sx, dx, sy, dy, *c]
+    b = _np_line_compiled(np.ascontiguousarray(b).reshape(rx, rx, -1),
+                          phase_x, stats)
+    b = b.reshape(rx, rx, ry, ry, *c)               # [dx(node), sx, sy, dy, *c]
+    b = np.moveaxis(b, (2, 3), (0, 1))              # [sy, dy, dx, sx, *c]
+    b = _np_line_compiled(np.ascontiguousarray(b).reshape(ry, ry, -1),
+                          phase_y, stats)
+    b = b.reshape(ry, ry, rx, rx, *c)               # [dy(node), sy, dx, sx, *c]
+    out = np.moveaxis(b, (0, 2, 1, 3), (0, 1, 2, 3))
+    return np.ascontiguousarray(out).reshape(n, n, *c), stats
+
+
+def route_program_stats(prog: RouteProgram, cube_nbytes: int) -> "ScheduleStats":
+    """Analytic ScheduleStats for moving one (n, n, ...) message cube of
+    ``cube_nbytes`` total bytes through a compiled program.
+
+    Exactly matches what :func:`simulate_schedule` / the round-by-round
+    interpreter count (the spmd executor uses this so NoCStats stay identical
+    to ``mode="sim"`` without re-running the numpy simulator)."""
+    stats = ScheduleStats()
+    n = prog.n_nodes
+    if prog.fused:
+        stats.rounds = 1
+        stats.link_bytes = int(cube_nbytes * (n - 1) / n)
+        return stats
+    for phase in prog.phases:
+        per_row = cube_nbytes // phase.sched.size
+        for rnd in phase.rounds:
+            stats.rounds += 1
+            for mv in rnd.moves:
+                stats.link_bytes += per_row * len(mv.perm)
+    return stats
 
 
 def topology_axes(topo: Topology) -> tuple[tuple[str, int], ...]:

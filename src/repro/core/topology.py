@@ -31,6 +31,58 @@ import math
 from typing import Iterable
 
 
+# ---------------------------------------------------------------------------
+# neighbor permutation tables — the (src, dst) pairs of one synchronous hop
+# along a 1D axis.  These are the raw material of the schedule→ppermute
+# compiler (`core.routing.compile_routes`): every routing round is one of
+# these permutations applied to a rotating buffer.
+# ---------------------------------------------------------------------------
+
+def fwd_pairs(n: int, wrap: bool) -> tuple[tuple[int, int], ...]:
+    """One +1 hop: node s forwards its buffer to s+1 (wraparound optional)."""
+    return tuple((s, (s + 1) % n) for s in range(n) if wrap or s + 1 < n)
+
+
+def bwd_pairs(n: int, wrap: bool) -> tuple[tuple[int, int], ...]:
+    """One -1 hop: node s forwards its buffer to s-1 (wraparound optional)."""
+    return tuple((s, (s - 1) % n) for s in range(n) if wrap or s - 1 >= 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisSchedule:
+    """Hop-decomposition spec of an all-to-all along one mesh axis.
+
+    ``axis``   — mesh axis name the exchange runs over (shard_map axis);
+    ``size``   — number of nodes along the axis;
+    ``wrap``   — wraparound links exist (ring/torus dimension);
+    ``unidir`` — rotate one direction only (the paper-faithful CONNECT ring
+                 routers forward a single direction).
+    """
+
+    axis: str
+    size: int
+    wrap: bool
+    unidir: bool = False
+
+    @property
+    def fwd_steps(self) -> int:
+        if self.unidir:
+            return self.size - 1
+        return self.size // 2 if self.wrap else self.size - 1
+
+    @property
+    def bwd_steps(self) -> int:
+        if self.unidir:
+            return 0
+        return (self.size - 1) // 2 if self.wrap else self.size - 1
+
+    def fwd_pairs(self) -> tuple[tuple[int, int], ...]:
+        return fwd_pairs(self.size, self.wrap)
+
+    def bwd_pairs(self) -> tuple[tuple[int, int], ...]:
+        return bwd_pairs(self.size, self.wrap)
+
+
 @dataclasses.dataclass(frozen=True)
 class Topology:
     """Base class; subclasses define connectivity and schedule cost."""
@@ -54,6 +106,15 @@ class Topology:
         return tot / (n * (n - 1))
 
     def bisection_links(self) -> int:
+        raise NotImplementedError
+
+    # -- schedule spec -------------------------------------------------------
+    def axis_schedules(self) -> tuple[AxisSchedule, ...]:
+        """Per-axis hop decomposition of this topology's all-to-all.
+
+        Dimension-ordered (XY) routing: phases run in the returned order, one
+        line/ring exchange per axis.  An empty tuple means the topology is an
+        ideal crossbar (single fused exchange, no hop decomposition)."""
         raise NotImplementedError
 
     # -- schedule cost -------------------------------------------------------
@@ -95,6 +156,9 @@ class Ring(Topology):
 
     def bisection_links(self) -> int:
         return 2
+
+    def axis_schedules(self) -> tuple[AxisSchedule, ...]:
+        return (AxisSchedule("noc", self.n_nodes, wrap=True, unidir=True),)
 
     def a2a_rounds(self) -> int:
         # unidirectional systolic rotation (paper-faithful: CONNECT ring routers
@@ -148,6 +212,12 @@ class Mesh2D(Topology):
     def bisection_links(self) -> int:
         return min(self.rx, self.ry)
 
+    def axis_schedules(self) -> tuple[AxisSchedule, ...]:
+        # XY dimension-ordered routing: phase X first, then Y
+        wrap = isinstance(self, Torus2D)
+        return (AxisSchedule("noc_x", self.rx, wrap=wrap),
+                AxisSchedule("noc_y", self.ry, wrap=wrap))
+
     def a2a_rounds(self) -> int:
         # dimension-ordered, bidirectional line exchange per dim
         return (self.rx - 1) + (self.ry - 1)
@@ -198,6 +268,9 @@ class FatTree(Topology):
     def n_links(self) -> int:
         # full-bisection: n/2 concurrent disjoint paths
         return self.n_nodes // 2
+
+    def axis_schedules(self) -> tuple[AxisSchedule, ...]:
+        return ()   # ideal crossbar: one fused exchange, no hop decomposition
 
     def a2a_rounds(self) -> int:
         return 1

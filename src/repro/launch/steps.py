@@ -8,6 +8,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
@@ -70,19 +71,36 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt_cfg: AdamWConfig,
         return l, mets, grads
 
     def grads_serdes(params, batch):
+        """Fully-manual shard_map region (manual over *every* mesh axis).
+
+        The earlier partial-manual lowering (manual over 'pod' only, data/model
+        auto inside) trips old XLA's ``sharding.IsManualSubgroup()`` check on
+        the pinned jax 0.4.37.  Fully-manual sidesteps it on old and new jax
+        alike: params enter replicated, each device computes grads on its own
+        (pod × data) batch shard, the within-pod average is an explicit pmean
+        over 'data' (the on-chip all-reduce), and only the cross-pod exchange
+        goes through the quasi-SERDES endpoints over the cut.  Model-axis
+        devices redundantly compute identical grads — the replication that
+        makes the region's outputs valid under ``out_specs=P()``."""
+        data_axes = tuple(a for a in ("data",) if a in mesh.axis_names)
+        sync_axes = ("pod",) + data_axes
+
         def pod_local(params, batch):
             (l, mets), grads = jax.value_and_grad(T.loss, has_aux=True)(params, batch, cfg)
+            if data_axes:
+                grads = jax.tree.map(lambda g: lax.pmean(g, data_axes), grads)
             grads, _ = cross_pod_mean(grads, "pod", serdes, n_pods=n_pods,
                                       serialized=True)
-            l = jax.lax.pmean(l, "pod")
-            mets = jax.tree.map(lambda m: jax.lax.pmean(m, "pod"), mets)
+            l = lax.pmean(l, sync_axes)
+            mets = jax.tree.map(lambda m: lax.pmean(m, sync_axes), mets)
             return l, mets, grads
 
-        bspec = jax.tree.map(lambda _: P("pod"), batch)
+        blead = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        bspec = jax.tree.map(lambda _: P(blead), batch)
         return shard_map(
             pod_local, mesh=mesh,
             in_specs=(P(), bspec), out_specs=(P(), P(), P()),
-            check_vma=False, axis_names={"pod"})(params, batch)
+            check_vma=False)(params, batch)
 
     grads_fn = grads_auto if (pod_sync == "auto" or n_pods == 1) else grads_serdes
 

@@ -9,18 +9,26 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
 # ---------------------------------------------------------------------------
-# hypothesis shim: property tests must *skip* (not ERROR at collection) when
-# hypothesis is not installed.  The stub mirrors the tiny API surface the test
-# suite uses (`given`, `settings`, `strategies as st`); any `@given` test body
-# is replaced by a pytest.skip.
+# hypothesis shim: property tests must not ERROR at collection when hypothesis
+# is not installed.  The stub mirrors the tiny API surface the test suite uses
+# (`given`, `settings`, `strategies as st`).  Strategies the stub knows how to
+# draw from (integers / sampled_from / booleans / just / tuples / one_of)
+# *degrade to seeded-random cases*: the test body runs N times with
+# deterministic draws instead of skipping, so property tests keep their teeth
+# without the dependency.  Only strategies the stub cannot generate fall back
+# to pytest.skip.
 # ---------------------------------------------------------------------------
 try:
     import hypothesis  # noqa: F401
 except ImportError:  # pragma: no cover - exercised only without hypothesis
     import types
+    import zlib
+
+    _FALLBACK_EXAMPLES = 8   # seeded-random cases per @given test
 
     class _AnyStrategy:
-        """Stands in for any strategy expression: st.foo(...).bar(...) | other."""
+        """Stands in for any strategy expression the stub can't draw from:
+        st.foo(...).bar(...) | other.  Tests using these skip."""
 
         def __call__(self, *args, **kwargs):
             return self
@@ -31,18 +39,93 @@ except ImportError:  # pragma: no cover - exercised only without hypothesis
         def __or__(self, other):
             return self
 
-    def _given(*_args, **_kwargs):
+    class _GenStrategy:
+        """A strategy the stub can draw seeded-random examples from."""
+
+        def __init__(self, draw):
+            self.draw = draw   # draw(rng) -> value
+
+        def __or__(self, other):
+            if isinstance(other, _GenStrategy):
+                return _GenStrategy(lambda rng: (self, other)[int(rng.integers(2))].draw(rng))
+            return _AnyStrategy()
+
+    def _st_integers(min_value=0, max_value=(1 << 16)):
+        return _GenStrategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    def _st_sampled_from(seq):
+        items = list(seq)
+        return _GenStrategy(lambda rng: items[int(rng.integers(len(items)))])
+
+    def _st_booleans():
+        return _GenStrategy(lambda rng: bool(rng.integers(2)))
+
+    def _st_floats(min_value=0.0, max_value=1.0, **_kw):
+        return _GenStrategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    def _st_lists(elements, min_size=0, max_size=10, **_kw):
+        if not isinstance(elements, _GenStrategy):
+            return _AnyStrategy()
+        return _GenStrategy(lambda rng: [
+            elements.draw(rng)
+            for _ in range(int(rng.integers(min_size, max_size + 1)))])
+
+    def _st_just(value):
+        return _GenStrategy(lambda rng: value)
+
+    def _st_tuples(*strats):
+        if all(isinstance(s, _GenStrategy) for s in strats):
+            return _GenStrategy(lambda rng: tuple(s.draw(rng) for s in strats))
+        return _AnyStrategy()
+
+    def _st_one_of(*strats):
+        if all(isinstance(s, _GenStrategy) for s in strats):
+            return _GenStrategy(
+                lambda rng: strats[int(rng.integers(len(strats)))].draw(rng))
+        return _AnyStrategy()
+
+    def _given(*arg_strats, **kw_strats):
+        all_strats = list(arg_strats) + list(kw_strats.values())
+        generable = all(isinstance(s, _GenStrategy) for s in all_strats)
+
         def deco(fn):
-            def skipper(*a, **k):
-                pytest.skip("hypothesis not installed")
+            name = getattr(fn, "__name__", "hypothesis_test")
+
+            if not generable:
+                def runner(*a, **k):
+                    pytest.skip("hypothesis not installed and stub cannot "
+                                "draw from this strategy")
+            else:
+                def runner(*a, **k):
+                    # deterministic per-test seed, stable across runs/workers
+                    rng = np.random.default_rng(zlib.crc32(name.encode()))
+                    ran = 0
+                    for ex in range(_FALLBACK_EXAMPLES):
+                        args = tuple(s.draw(rng) for s in arg_strats)
+                        kwargs = {kk: s.draw(rng) for kk, s in kw_strats.items()}
+                        try:
+                            fn(*a, *args, **kwargs, **k)
+                            ran += 1
+                        except _AssumeFailed:
+                            continue
+                        except Exception as e:
+                            raise AssertionError(
+                                f"seeded-random case {ex} failed: "
+                                f"args={args} kwargs={kwargs}") from e
+                    if not ran:   # don't pass vacuously (hypothesis: Unsatisfied)
+                        pytest.skip("all seeded-random cases filtered by assume()")
 
             # keep the test's name for reporting, but NOT its signature
             # (pytest must not try to resolve strategy params as fixtures)
-            skipper.__name__ = getattr(fn, "__name__", "hypothesis_test")
-            skipper.__doc__ = getattr(fn, "__doc__", None)
-            return skipper
+            runner.__name__ = name
+            runner.__doc__ = getattr(fn, "__doc__", None)
+            return runner
 
         return deco
+
+    class _AssumeFailed(Exception):
+        pass
 
     def _settings(*_args, **_kwargs):
         def deco(fn):
@@ -50,7 +133,9 @@ except ImportError:  # pragma: no cover - exercised only without hypothesis
 
         return deco
 
-    def _assume(_cond):
+    def _assume(cond):
+        if not cond:
+            raise _AssumeFailed()
         return True
 
     _stub = types.ModuleType("hypothesis")
@@ -60,7 +145,15 @@ except ImportError:  # pragma: no cover - exercised only without hypothesis
     _stub.HealthCheck = _AnyStrategy()
     _stub.example = _settings
     _stub.strategies = types.ModuleType("hypothesis.strategies")
-    _stub.strategies.__getattr__ = lambda name: _AnyStrategy()
+    _stub.strategies.integers = _st_integers
+    _stub.strategies.sampled_from = _st_sampled_from
+    _stub.strategies.booleans = _st_booleans
+    _stub.strategies.floats = _st_floats
+    _stub.strategies.lists = _st_lists
+    _stub.strategies.just = _st_just
+    _stub.strategies.tuples = _st_tuples
+    _stub.strategies.one_of = _st_one_of
+    _stub.strategies.__getattr__ = lambda name: lambda *a, **k: _AnyStrategy()
     sys.modules["hypothesis"] = _stub
     sys.modules["hypothesis.strategies"] = _stub.strategies
 

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 from repro.core import (NoCConfig, NoCExecutor, cut, make_topology,
                         optimize_placement, PE, place_greedy, place_round_robin,
                         placement_cost, Port, simulate_schedule, TaskGraph)
+from tests.conftest import run_with_devices
 
 TOPOLOGIES = ["ring", "mesh", "torus", "fattree"]
 
@@ -162,6 +163,36 @@ def test_golden_stats_bmvm():
     assert st.as_dict() == dict(
         waves=4, rounds=8, link_bytes=5632, payload_bytes=256, flits=128,
         cross_pod_msgs=0, cross_pod_wire_bytes=0, cross_pod_beats=0)
+
+
+@pytest.mark.slow
+def test_golden_stats_spmd_matches_sim_goldens():
+    """The spmd lowering must reproduce the exact golden NoCStats above —
+    flit/round/link accounting may not drift between transports."""
+    run_with_devices("""
+import numpy as np, jax.numpy as jnp
+from repro.apps import bmvm, ldpc
+
+rng = np.random.default_rng(0)
+llr = ldpc.awgn_llr(np.zeros(7, np.int8), 3.0, rng)
+_, _, st = ldpc.decode_on_noc(ldpc.fano_plane_H(), llr, 10, mode="spmd")
+assert st.as_dict() == dict(
+    waves=20, rounds=60, link_bytes=92160, payload_bytes=840, flits=420,
+    cross_pod_msgs=0, cross_pod_wire_bytes=0, cross_pod_beats=0), st.as_dict()
+
+rng = np.random.default_rng(0)
+cfg = bmvm.BMVMConfig(n=64, k=8, fold=2)
+A = rng.integers(0, 2, (64, 64)).astype(np.uint8)
+v = rng.integers(0, 2, (64,)).astype(np.uint8)
+lut = bmvm.preprocess(A, cfg)
+out, st = bmvm.iterate_noc_sim(jnp.asarray(lut), v, cfg, 2, topology="mesh",
+                               mode="spmd")
+assert np.array_equal(out.reshape(1, -1), bmvm.software_ref(A, v[None], 2))
+assert st.as_dict() == dict(
+    waves=4, rounds=8, link_bytes=5632, payload_bytes=256, flits=128,
+    cross_pod_msgs=0, cross_pod_wire_bytes=0, cross_pod_beats=0), st.as_dict()
+print("OK")
+""", n_devices=16)
 
 
 # ---------------------------------------------------------------------------
