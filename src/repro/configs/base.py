@@ -50,8 +50,12 @@ class ModelConfig:
     top_k: int = 0
     d_ff_expert: int = 0
     moe_impl: str = "gather"         # gather | noc | dense
-    moe_topology: str = "fattree"
+    moe_topology: str = "fattree"    # fattree | ring | mesh2d | torus2d
     capacity_factor: float = 1.25
+    # >0: CONNECT flit-buffer-depth capacity knob — each (src, expert)
+    # dispatch FIFO holds this many token slots and capacity_factor is
+    # DERIVED from it (models.moe.dispatch_capacity); 0: use capacity_factor
+    moe_flit_buffer_depth: int = 0
     aux_weight: float = 0.01
     # mamba
     mamba_d_state: int = 16

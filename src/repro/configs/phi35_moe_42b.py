@@ -19,6 +19,7 @@ FULL = ModelConfig(
     top_k=2,
     d_ff_expert=6400,
     moe_impl="gather",
+    moe_topology="mesh2d",   # NoC mapping when moe_impl="noc"
 )
 
 SMOKE = FULL.replace(

@@ -25,6 +25,8 @@ FULL = ModelConfig(
     top_k=8,
     d_ff_expert=1536,
     moe_impl="gather",
+    # flagship NoC mapping when moe_impl="noc": 128 expert PEs on a 2D torus
+    moe_topology="torus2d",
     tie_embeddings=False,
 )
 

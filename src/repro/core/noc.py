@@ -32,8 +32,17 @@ Execution modes — the three contracts
 
 The contract between the modes: ``direct`` defines values, ``sim`` defines
 values + flit/round accounting, ``spmd`` must reproduce both bit-for-bit while
-actually moving bytes between devices.  Every later scaling feature (MoE
-dispatch over the NoC, LM-scale placement) builds on that equivalence.
+actually moving bytes between devices.
+
+The same compiled infrastructure also carries the LM-scale workload:
+`models.moe` with ``impl="noc"`` routes expert-parallel token packets through
+``routing.compile_routes`` / ``run_route_program`` (linearized over the
+``model`` mesh axis — one ``lax.ppermute`` per hop, all four topologies), with
+``routing.route_program_stats`` supplying exact flit/round/link-byte counters
+per layer invocation (`models.moe.MoEDispatchStats`) and
+``NoCConfig.flit_buffer_depth`` acting as the token-capacity knob — the
+paper's "Data Distributor → routers → Data Collector" wrapper applied to a
+mixture-of-experts layer.
 
 The flit-program compile step
 -----------------------------
@@ -103,15 +112,30 @@ class NoCStats:
 
 @dataclasses.dataclass(frozen=True)
 class NoCConfig:
-    """CONNECT "Network and Router Options" analog (paper §VI-B)."""
+    """CONNECT "Network and Router Options" analog (paper §VI-B).
+
+    ``flit_buffer_depth`` is the capacity knob for MoE dispatch over the NoC
+    (`models.moe`): each (source rank, expert) dispatch FIFO holds that many
+    token slots, and the MoE's effective ``capacity_factor`` is *derived* from
+    it (see `models.moe.dispatch_capacity`) instead of being configured
+    independently — one knob, the paper's buffer-depth sweep."""
 
     flit_data_width: int = 16          # bits
-    flit_buffer_depth: int = 8         # capacity factor analog for MoE dispatch
+    flit_buffer_depth: int = 8         # per-(src, expert) FIFO depth, in slots
     serdes: qserdes.QuasiSerdesConfig = dataclasses.field(
         default_factory=qserdes.QuasiSerdesConfig)
 
+    @property
+    def flit_wire_bytes(self) -> int:
+        """On-wire/storage bytes of ONE flit: ceil(width/8).  A 12-bit flit
+        occupies 2 bytes of FIFO storage — truncating division silently
+        under-counted every non-byte-multiple width."""
+        return -(-self.flit_data_width // 8)
+
     def flits_for(self, nbytes: int) -> int:
-        per = self.flit_data_width // 8
+        # payload capacity of a flit is the *whole* bytes it can carry
+        # (floor), never 0 for sub-byte widths
+        per = max(1, self.flit_data_width // 8)
         return -(-nbytes // per)
 
 
@@ -129,8 +153,8 @@ def wrapper_overhead(graph: TaskGraph, cfg: Optional[NoCConfig] = None) -> list[
         in_b = sum(p.nbytes for p in pe.inputs)
         out_b = sum(p.nbytes for p in pe.outputs)
         raw = in_b + out_b
-        fifo = cfg.flit_buffer_depth * cfg.flit_data_width // 8 * (len(pe.inputs) + len(pe.outputs))
-        flit_b = sum(cfg.flits_for(p.nbytes) * cfg.flit_data_width // 8
+        fifo = cfg.flit_buffer_depth * cfg.flit_wire_bytes * (len(pe.inputs) + len(pe.outputs))
+        flit_b = sum(cfg.flits_for(p.nbytes) * cfg.flit_wire_bytes
                      for p in list(pe.inputs) + list(pe.outputs))
         rows.append(dict(pe=pe.name, wo_wrapper_bytes=raw, fifo_bytes=fifo,
                          flit_bytes=flit_b, with_wrapper_bytes=flit_b + fifo,
@@ -216,7 +240,7 @@ class NoCExecutor:
     def _compile_wave(self, wave: list[str]) -> _WaveProgram:
         g, cfg = self.graph, self.cfg
         n = self.topo.n_nodes
-        flit_w = cfg.flit_data_width // 8
+        flit_w = cfg.flit_wire_bytes
         pod_of = self.plan.pod_of_node if self.plan is not None else None
         slots: list[_MsgSlot] = []
         pair_off: dict[tuple[int, int], int] = {}
@@ -495,7 +519,7 @@ class NoCExecutor:
                     stats.cross_pod_wire_bytes += qserdes.link_bytes_on_wire(
                         val.shape, val.dtype, cfg.serdes)
                     stats.cross_pod_beats += cfg.serdes.lanes
-            flit_w = cfg.flit_data_width // 8
+            flit_w = cfg.flit_wire_bytes
             buf_bytes = max(
                 (sum(cfg.flits_for(v.nbytes) * flit_w for v, _, _ in msgs)
                  for msgs in per_pair.values()), default=0)

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax import lax
 
 import dataclasses
+from typing import Optional
 
 from ..compat import axis_size
 from .topology import (AxisSchedule, FatTree, Mesh2D, Ring, Topology, Torus2D,
@@ -210,42 +211,74 @@ def compile_routes(topo: Topology) -> RouteProgram:
     return RouteProgram(topo.name, topo.n_nodes, topology_axes(topo), phases)
 
 
-def _line_exchange_compiled(x: jax.Array, phase: LinePhase) -> jax.Array:
+def _line_exchange_compiled(x: jax.Array, phase: LinePhase,
+                            axis_name: Optional[str] = None,
+                            coord: Optional[jax.Array] = None,
+                            expand=None) -> jax.Array:
     """Execute one compiled line phase on the per-device view (inside
-    shard_map): x is (n, *chunk) destination-indexed, returns source-indexed."""
+    shard_map): x is (n, *chunk) destination-indexed, returns source-indexed.
+
+    By default the phase runs over its own mesh axis (``phase.sched.axis``).
+    With ``axis_name``/``coord``/``expand`` it runs *linearized* over a single
+    flat device axis that embeds the phase axis: ``coord`` is this device's
+    position along the phase axis and ``expand`` maps the phase's per-axis
+    (src, dst) hop pairs to full-axis pairs (every row/column concurrently)."""
     sched = phase.sched
-    i = lax.axis_index(sched.axis)
+    name = axis_name or sched.axis
+    i = lax.axis_index(name) if coord is None else coord
     me = lax.dynamic_index_in_dim(x, i, 0, keepdims=False)
     out = _put(jnp.zeros_like(x), i, me, True)
     bufs = [x, x]
     for rnd in phase.rounds:
         for mv in rnd.moves:
-            bufs[mv.buf] = lax.ppermute(bufs[mv.buf], sched.axis, list(mv.perm))
+            perm = expand(mv.perm) if expand is not None else list(mv.perm)
+            bufs[mv.buf] = lax.ppermute(bufs[mv.buf], name, perm)
             src = jnp.asarray(mv.src_table, jnp.int32)[i]
             val = lax.dynamic_index_in_dim(bufs[mv.buf], i, 0, keepdims=False)
             out = _put(out, src, val, src >= 0)
     return out
 
 
-def run_route_program(x: jax.Array, prog: RouteProgram) -> jax.Array:
-    """Execute a compiled RouteProgram inside ``shard_map`` over ``prog.axes``.
+def run_route_program(x: jax.Array, prog: RouteProgram,
+                      axis_name: Optional[str] = None) -> jax.Array:
+    """Execute a compiled RouteProgram inside ``shard_map``.
 
     Same contract as the handwritten schedules: ``x`` is the per-device
     ``(n, *chunk)`` destination-indexed view; returns the source-indexed
-    ``(n, *chunk)`` received view (== :func:`transpose_oracle`)."""
+    ``(n, *chunk)`` received view (== :func:`transpose_oracle`).
+
+    With ``axis_name=None`` the program runs over its own mesh axes
+    (``prog.axes`` — the NoC executor's ``mode="spmd"``).  Passing an
+    ``axis_name`` runs the *same* program linearized over one flat device
+    axis of size ``prog.n_nodes`` (node linear id = ``y*rx + x`` for 2D
+    topologies): each per-axis hop permutation is statically expanded to the
+    full axis so every row/column exchanges concurrently, exactly one
+    ``lax.ppermute`` per hop move.  This is how callers embedded in an
+    existing mesh (e.g. MoE token dispatch over the ``model`` axis) route
+    through the topology without building a dedicated NoC mesh."""
     if prog.fused:
-        return lax.all_to_all(x, prog.axes[0][0], split_axis=0, concat_axis=0)
+        name = axis_name or prog.axes[0][0]
+        return lax.all_to_all(x, name, split_axis=0, concat_axis=0)
     if len(prog.phases) == 1:
-        return _line_exchange_compiled(x, prog.phases[0])
+        return _line_exchange_compiled(x, prog.phases[0], axis_name=axis_name)
     # 2D XY routing: factorized exchange, same data motion as grid_all_to_all
     (_, ry), (_, rx) = prog.axes          # axes = (noc_y, noc_x)
     phase_x, phase_y = prog.phases        # phases ordered X then Y
+    cx = cy = None
+    ex_x = ex_y = None
+    if axis_name is not None:
+        i = lax.axis_index(axis_name)
+        cx, cy = i % rx, i // rx
+        ex_x = lambda pairs: [(y * rx + s, y * rx + d)
+                              for y in range(ry) for s, d in pairs]
+        ex_y = lambda pairs: [(s * rx + xc, d * rx + xc)
+                              for xc in range(rx) for s, d in pairs]
     c = x.shape[1:]
     b = x.reshape(ry, rx, *c)             # (dy, dx, *c)
     b = jnp.moveaxis(b, 1, 0)             # (dx, dy, *c)
-    b = _line_exchange_compiled(b, phase_x)   # (sx, dy, *c)
+    b = _line_exchange_compiled(b, phase_x, axis_name, cx, ex_x)   # (sx, dy, *c)
     b = jnp.moveaxis(b, 1, 0)             # (dy, sx, *c)
-    b = _line_exchange_compiled(b, phase_y)   # (sy, sx, *c)
+    b = _line_exchange_compiled(b, phase_y, axis_name, cy, ex_y)   # (sy, sx, *c)
     return b.reshape(ry * rx, *c)         # source linear index sy*rx + sx
 
 

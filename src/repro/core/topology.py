@@ -276,7 +276,9 @@ class FatTree(Topology):
         return 1
 
 
-TOPOLOGIES = {"ring": Ring, "mesh": Mesh2D, "torus": Torus2D, "fattree": FatTree}
+TOPOLOGIES = {"ring": Ring, "mesh": Mesh2D, "torus": Torus2D, "fattree": FatTree,
+              # class-name aliases (MoE configs use the explicit 2D names)
+              "mesh2d": Mesh2D, "torus2d": Torus2D}
 
 
 def make_topology(name: str, n_nodes: int) -> Topology:

@@ -1,4 +1,5 @@
 """Model zoo: config-driven architectures assembled in transformer.py."""
 from . import attention, layers, mla, moe, ssm, transformer, xlstm
+from .moe import MoEConfig, MoEDispatchStats, dispatch_capacity
 from .transformer import (abstract_params, decode_step, forward, init_cache, loss,
                           prefill)

@@ -2,9 +2,9 @@
 
 Tokens are packets; the router's top-k gate writes the destination PE
 (expert) into each packet header; dispatch/combine are the Data
-Distributor / Data Collector wrappers; per-(src,dst) buffer capacity is the
-CONNECT flit-buffer-depth analog (tokens beyond capacity are dropped, exactly
-like a bounded FIFO back-pressuring).
+Distributor / Data Collector wrappers; per-(src, expert) buffer capacity is
+the CONNECT flit-buffer-depth analog (tokens beyond capacity are dropped,
+exactly like a bounded FIFO back-pressuring).
 
 Two engines (both first-class, selectable per config):
 
@@ -15,19 +15,34 @@ Two engines (both first-class, selectable per config):
   for giant pjit graphs.
 
 * ``noc`` — the paper-faithful packet route: activations arrive
-  sequence-sharded over 'model'; per-destination-rank packet buffers go
-  through the *topology routing schedule* (`core.routing`: fat-tree → one
-  fused all_to_all; ring/torus → ppermute rounds), experts compute, and the
-  return path reuses the same schedule.  This is phase-1+phase-2 of the
-  paper applied to an LM layer.
+  sequence-sharded over 'model'; per-destination-rank packet cubes move
+  through the topology's *compiled route program*
+  (`core.routing.compile_routes` → `run_route_program`, linearized over the
+  'model' axis: fat-tree → one fused all_to_all; ring/mesh/torus → per-hop
+  ppermute rounds), experts compute, and the return path runs the same
+  program again.  This is phase-1+phase-2 of the paper applied to an LM
+  layer; `core.routing.route_program_stats` yields the exact flit/round/
+  link-byte counters per invocation (:class:`MoEDispatchStats`).
+
+Capacity semantics are UNIFIED across engines (`dispatch_capacity`): both
+budget token slots per (source shard, expert) dispatch FIFO, so the same
+config drops the same tokens whichever engine runs (property-tested).  With
+an attached :class:`~repro.core.noc.NoCConfig`, its ``flit_buffer_depth`` IS
+the capacity knob — the effective ``capacity_factor`` is derived from it,
+not configured separately.
+
+Packet framing on the noc engine is *static*, like the NoC executor's
+compiled flit programs: the (expert, slot) position inside the per-(src,dst)
+cube encodes the destination expert, so no header bytes ride the links —
+the same compile-time-contract framing `core.noc` uses for app graphs.
 
 Both engines implement the same math (property-tested against ``dense_ref``).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional
+import warnings
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +50,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from ..compat import get_abstract_mesh, shard_map
-from ..core.partition import constrain
+from ..core.noc import NoCConfig
 from .layers import ParamSpec
 
 
@@ -47,8 +62,39 @@ class MoEConfig:
     d_ff: int
     capacity_factor: float = 1.25
     impl: str = "gather"            # gather | noc | dense
-    noc_topology: str = "fattree"   # fattree | ring  (routing schedule for impl=noc)
+    noc_topology: str = "fattree"   # fattree | ring | mesh2d | torus2d
     act: str = "silu"
+    # NoC dispatch options: when set, flit_buffer_depth becomes the capacity
+    # knob (capacity_factor is then *derived* — see dispatch_capacity)
+    noc: Optional[NoCConfig] = None
+
+
+@dataclasses.dataclass
+class MoEDispatchStats:
+    """Per-invocation dispatch accounting, returned by :func:`moe_apply`.
+
+    ``drops`` / ``peak_occupancy`` are data-dependent (traced under jit);
+    everything else is static, derived from shapes and the compiled route
+    program.  For ``engine="noc"`` the flit/round/link-byte counters are
+    exactly ``2 ×`` :func:`~repro.core.routing.route_program_stats` of the
+    dispatched token cube (outbound trip + return trip) — tested.
+    Counters are per model-axis NoC invocation (data-parallel replicas run
+    their own concurrent dispatch; rounds are physical, counted once).
+    """
+
+    engine: str                     # engine that actually ran
+    topology: Optional[str]         # noc engine: the routed topology
+    fallback: Optional[str]         # reason a requested engine was not used
+    capacity: int                   # per-(src, expert) FIFO depth, token slots
+    capacity_factor: float          # effective (possibly derived) factor
+    flits: int                      # framed flits on the links (out + back)
+    rounds: int                     # ppermute rounds (out + back)
+    link_bytes: int                 # bytes crossing topology links
+    drops: Any = 0                  # tokens dropped by capacity (traced)
+    peak_occupancy: Any = 0         # max tokens demanded of one (src,dst) buffer
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
 
 
 def moe_specs(c: MoEConfig, dtype=jnp.float32) -> dict:
@@ -63,6 +109,73 @@ def moe_specs(c: MoEConfig, dtype=jnp.float32) -> dict:
 
 def _act(x, kind):
     return jax.nn.silu(x) if kind == "silu" else jax.nn.gelu(x, approximate=True)
+
+
+# ---------------------------------------------------------------------------
+# capacity — ONE formula for both engines
+# ---------------------------------------------------------------------------
+
+def dispatch_capacity(tokens_per_src: int, c: MoEConfig) -> int:
+    """Per-(source shard, expert) dispatch-FIFO depth in token slots.
+
+    The single capacity budget both engines enforce (gather == noc parity:
+    the same tokens are dropped whichever engine runs).  With an attached
+    NoCConfig the CONNECT ``flit_buffer_depth`` IS the knob — each
+    (src, expert) FIFO holds that many token slots, exactly (depth 1 must be
+    expressible for the drops-vs-depth sweep) and the effective
+    capacity_factor falls out (:func:`effective_capacity_factor`).  Without
+    one, the classic ``tokens·top_k·capacity_factor / n_experts`` formula
+    applies with the legacy floor of 8 slots, so small-T decode-shaped
+    dispatch stays drop-free as it always was.  Clamped to
+    [1, tokens_per_src·top_k]."""
+    if c.noc is not None:
+        cap = c.noc.flit_buffer_depth
+    else:
+        cap = max(8, int(tokens_per_src * c.top_k * c.capacity_factor / c.n_experts))
+    return max(1, min(cap, tokens_per_src * c.top_k))
+
+
+def effective_capacity_factor(tokens_per_src: int, c: MoEConfig) -> float:
+    """The capacity_factor implied by :func:`dispatch_capacity` — the derived
+    quantity the stats report (never an independent second knob)."""
+    cap = dispatch_capacity(tokens_per_src, c)
+    return cap * c.n_experts / (tokens_per_src * c.top_k)
+
+
+def _dispatch_slots(flat_dst, blk_of_pkt, experts, n_blocks: int, cap: int):
+    """First-``cap`` (arrival order) packet slots per (expert, source block).
+
+    flat_dst: (P,) destination expert of each packet; blk_of_pkt: (P,) source
+    block; experts: (E',) expert ids to dispatch (may be traced).  Returns
+    (slots, valid) of shape (E', n_blocks, cap)."""
+    npkt = flat_dst.shape[0]
+    arrival = -jnp.arange(npkt, dtype=jnp.float32)
+
+    def pick(e, blk):
+        mine = (flat_dst == e) & (blk_of_pkt == blk)
+        score = jnp.where(mine, arrival, -jnp.inf)
+        _, slots = lax.top_k(score, cap)
+        return slots, mine[slots]
+
+    ne = experts.shape[0]
+    ee = jnp.repeat(experts, n_blocks)
+    bb = jnp.tile(jnp.arange(n_blocks), ne)
+    slots, valid = jax.vmap(pick)(ee, bb)
+    return slots.reshape(ne, n_blocks, cap), valid.reshape(ne, n_blocks, cap)
+
+
+def _dispatch_counts(flat_dst, blk_of_pkt, n_experts: int, n_blocks: int):
+    """Demanded tokens per (expert, source block) — pre-capacity load."""
+    return jnp.zeros((n_experts, n_blocks), jnp.int32).at[
+        flat_dst, blk_of_pkt].add(1)
+
+
+def _drops_and_peak(counts, cap: int, n_ranks: int):
+    """(Σ_e relu(load_e - cap), max per-(src-block, dst-rank) demand)."""
+    epr = counts.shape[0] // n_ranks
+    drops = jnp.sum(jnp.maximum(counts - cap, 0))
+    per_pair = counts.reshape(n_ranks, epr, -1).sum(axis=1)   # (dst_rank, blk)
+    return drops, per_pair.max()
 
 
 def _router(x_flat, wr, c: MoEConfig):
@@ -112,117 +225,133 @@ def _expert_ffn(xe, wg, wu, wd, act):
 # engine 1: gather (EP over replicated activations)
 # ---------------------------------------------------------------------------
 
-def _gather_local(x_flat, wr, wg, wu, wd, c: MoEConfig, n_ranks: int, axis: str):
+def _gather_local(x_flat, wr, wg, wu, wd, c: MoEConfig, n_ranks: int, axis: str,
+                  blk_of, n_blocks: int):
+    """blk_of: (T,) source block of each token (== the noc engine's source
+    rank when the sequence divides), so capacity is enforced per
+    (source block, expert) — identical drop sets to the noc engine."""
     T, d = x_flat.shape
     rank = lax.axis_index(axis)
     epr = c.n_experts // n_ranks
-    cap = min(max(8, int(T * c.top_k * c.capacity_factor / c.n_experts)),
-              T * c.top_k)
+    cap = dispatch_capacity(T // n_blocks, c)
     w, idx, _, (me, ce) = _router(x_flat, wr, c)
 
     # packet headers: (T*k,) destination expert + combine weight
     flat_dst = idx.reshape(-1)
     flat_w = w.reshape(-1)
     tok_of = jnp.repeat(jnp.arange(T), c.top_k)
-
-    def pick(e):
-        """first-`cap` (arrival order) packet slots addressed to expert e."""
-        mine = flat_dst == e
-        score = jnp.where(mine, -jnp.arange(T * c.top_k, dtype=jnp.float32), -jnp.inf)
-        _, slots = lax.top_k(score, cap)
-        valid = mine[slots]
-        return slots, valid
+    blk_of_pkt = jnp.repeat(blk_of, c.top_k)
 
     local_e = rank * epr + jnp.arange(epr)
-    slots, valid = jax.vmap(pick)(local_e)                  # (epr, cap)
-    toks = tok_of[slots]                                    # (epr, cap)
+    slots, valid = _dispatch_slots(flat_dst, blk_of_pkt, local_e, n_blocks, cap)
+    slots = slots.reshape(epr, -1)                          # (epr, n_blocks*cap)
+    valid = valid.reshape(epr, -1)
+    toks = tok_of[slots]
     xe = x_flat[toks] * valid[..., None].astype(x_flat.dtype)
-    ye = _expert_ffn(xe, wg, wu, wd, c.act)                 # (epr, cap, d)
+    ye = _expert_ffn(xe, wg, wu, wd, c.act)                 # (epr, B*cap, d)
     comb = (flat_w[slots] * valid.astype(flat_w.dtype))[..., None]
     out = jnp.zeros_like(x_flat)
     out = out.at[toks.reshape(-1)].add((ye * comb).reshape(-1, d))
     out = lax.psum(out, axis)                               # combine expert ranks
-    return out, (me, ce)
+    counts = _dispatch_counts(flat_dst, blk_of_pkt, c.n_experts, n_blocks)
+    drops, peak = _drops_and_peak(counts, cap, n_ranks)     # full-layer (replicated)
+    return out, (me, ce), (drops, peak)
 
 
 # ---------------------------------------------------------------------------
-# engine 2: noc (paper packet switching over the topology schedule)
+# engine 2: noc (paper packet switching over the compiled route program)
 # ---------------------------------------------------------------------------
 
-def _noc_local(x_flat, wr, wg, wu, wd, c: MoEConfig, n_ranks: int, axis: str):
-    """x_flat: (T_loc, d) — tokens sequence-sharded over `axis`.
+def _noc_local(x_flat, wr, wg, wu, wd, c: MoEConfig, n_ranks: int, axis: str,
+               prog, cap: int):
+    """x_flat: (T_loc, d) — tokens sequence-sharded over ``axis``.
 
-    Route token packets to expert ranks with the topology schedule, compute,
-    route back with the same schedule, combine.
+    Pack per-destination-rank token cubes (static (expert, slot) framing),
+    move them out and back with the compiled :class:`RouteProgram`
+    (`run_route_program` linearized over ``axis``), compute, combine.
     """
-    from ..core.routing import crossbar_all_to_all, ring_all_to_all_unidir
-
-    a2a = (functools.partial(ring_all_to_all_unidir, axis_name=axis)
-           if c.noc_topology == "ring" else
-           functools.partial(crossbar_all_to_all, axis_name=axis))
+    from ..core.routing import run_route_program
 
     T, d = x_flat.shape
-    rank = lax.axis_index(axis)
-    epr = c.n_experts // n_ranks
-    # per-(src,dst-rank) packet buffer capacity — the flit-buffer-depth analog
-    cap = min(max(8, int(T * c.top_k * c.capacity_factor / n_ranks)), T * c.top_k)
+    E = c.n_experts
+    epr = E // n_ranks
     w, idx, _, (me, ce) = _router(x_flat, wr, c)
 
-    flat_dst_rank = (idx // epr).reshape(-1)                # (T*k,)
-    flat_e_local = (idx % epr).reshape(-1)
+    flat_dst = idx.reshape(-1)                               # (T*k,) expert id
     flat_w = w.reshape(-1)
     tok_of = jnp.repeat(jnp.arange(T), c.top_k)
+    blk0 = jnp.zeros_like(flat_dst)                          # one local source block
 
-    def pack(dst):
-        mine = flat_dst_rank == dst
-        score = jnp.where(mine, -jnp.arange(T * c.top_k, dtype=jnp.float32), -jnp.inf)
-        _, slots = lax.top_k(score, cap)
-        valid = mine[slots]
-        return slots, valid
-
-    slots, valid = jax.vmap(pack)(jnp.arange(n_ranks))       # (R, cap)
+    slots, valid = _dispatch_slots(flat_dst, blk0, jnp.arange(E), 1, cap)
+    slots, valid = slots[:, 0], valid[:, 0]                  # (E, cap)
     toks = tok_of[slots]
-    payload = x_flat[toks] * valid[..., None].astype(x_flat.dtype)      # (R, cap, d)
-    hdr_e = jnp.where(valid, flat_e_local[slots], 0)                    # (R, cap)
-    hdr_w = jnp.where(valid, flat_w[slots], 0.0)
+    payload = x_flat[toks] * valid[..., None].astype(x_flat.dtype)   # (E, cap, d)
 
-    # --- outbound hop(s): Data Distributor -> routers -> remote Collector
-    rx = a2a(payload)                                        # (R, cap, d) from each src
-    rhdr_e = a2a(hdr_e[..., None])[..., 0]
-    rvalid = a2a(valid[..., None].astype(jnp.int32))[..., 0] > 0
+    # --- outbound: Data Distributor -> compiled route program -> Collector.
+    # payload row e = (dst_rank e//epr, local expert e%epr): rank-major, so the
+    # (n_ranks, epr*cap, d) cube is destination-indexed as the program expects.
+    cube = payload.reshape(n_ranks, epr * cap, d)
+    rx = run_route_program(cube, prog, axis_name=axis)       # (src_rank, epr*cap, d)
 
-    # --- local expert compute on received packets
-    flat_rx = rx.reshape(-1, d)                              # (R*cap, d)
-    flat_e = rhdr_e.reshape(-1)
-    onehot = jax.nn.one_hot(flat_e, epr, dtype=x_flat.dtype) * rvalid.reshape(-1, 1)
-    xe = jnp.einsum("td,te->etd", flat_rx, onehot)           # (epr, R*cap, d)
-    ye = _expert_ffn(xe, wg, wu, wd, c.act)
-    y_flat = jnp.einsum("etd,te->td", ye, onehot)            # (R*cap, d)
+    # --- local expert compute; slot position IS the header (static framing)
+    xe = rx.reshape(n_ranks, epr, cap, d)
+    xe = jnp.moveaxis(xe, 1, 0).reshape(epr, n_ranks * cap, d)
+    ye = _expert_ffn(xe, wg, wu, wd, c.act)                  # (epr, R*cap, d)
 
-    # --- return hop(s): same schedule back to the source rank
-    back = a2a(y_flat.reshape(n_ranks, cap, d))              # (R, cap, d), slot-aligned
-    contrib = back * (hdr_w[..., None]).astype(back.dtype) * valid[..., None].astype(back.dtype)
+    # --- return trip: the same program, cube destination-indexed by src rank
+    ycube = jnp.moveaxis(ye.reshape(epr, n_ranks, cap, d), 1, 0)
+    back = run_route_program(ycube.reshape(n_ranks, epr * cap, d), prog,
+                             axis_name=axis)                 # (exp_rank, epr*cap, d)
+    back = back.reshape(E, cap, d)                           # slot-aligned with payload
+    contrib = back * (flat_w[slots] * valid.astype(flat_w.dtype))[..., None]
     out = jnp.zeros_like(x_flat)
     out = out.at[toks.reshape(-1)].add(contrib.reshape(-1, d))
-    return out, (me, ce)
+    counts = _dispatch_counts(flat_dst, blk0, E, 1)
+    drops, peak = _drops_and_peak(counts, cap, n_ranks)      # this shard's share
+    return out, (me, ce), (drops, peak)
 
 
 # ---------------------------------------------------------------------------
 # public layer
 # ---------------------------------------------------------------------------
 
-def moe_apply(params: dict, x: jax.Array, c: MoEConfig) -> tuple[jax.Array, jax.Array]:
-    """x: (B, S, d) -> (out, aux_loss).  Engine per ``c.impl``."""
+def _static_stats(engine: str, c: MoEConfig, *, fallback=None, topology=None,
+                  capacity=0, tokens_per_src=0, flits=0, rounds=0,
+                  link_bytes=0, drops=0, peak=0) -> MoEDispatchStats:
+    cf = (effective_capacity_factor(tokens_per_src, c) if tokens_per_src
+          else c.capacity_factor)
+    return MoEDispatchStats(engine=engine, topology=topology, fallback=fallback,
+                            capacity=capacity, capacity_factor=cf, flits=flits,
+                            rounds=rounds, link_bytes=link_bytes, drops=drops,
+                            peak_occupancy=peak)
+
+
+def moe_apply(params: dict, x: jax.Array, c: MoEConfig
+              ) -> tuple[jax.Array, jax.Array, MoEDispatchStats]:
+    """x: (B, S, d) -> (out, aux_loss, MoEDispatchStats).
+
+    Engine per ``c.impl``.  Every fallback away from the requested engine is
+    recorded in ``stats.fallback``; the silent-perf-cliff ones (expert count
+    not divisible across ranks, decode-shaped inputs demoting ``noc``) also
+    emit a ``UserWarning``.  The expected single-host no-mesh path records a
+    reason without warning."""
     if c.impl == "dense":
-        return dense_ref(params, x, c)
+        out, aux = dense_ref(params, x, c)
+        return out, aux, _static_stats("dense", c)
 
     mesh = get_abstract_mesh()
     if mesh is None or "model" not in (mesh.axis_names or ()):
         # no mesh context (unit tests / single host): run the oracle
-        return dense_ref(params, x, c)
+        out, aux = dense_ref(params, x, c)
+        return out, aux, _static_stats(
+            "dense", c, fallback="no mesh context ('model' axis absent)")
     n_ranks = mesh.shape["model"]
     if c.n_experts % n_ranks:
-        return dense_ref(params, x, c)
+        reason = (f"n_experts={c.n_experts} not divisible by model ranks="
+                  f"{n_ranks}: dense_ref fallback, O(E*T*d*f) per token")
+        warnings.warn(f"moe_apply: {reason}", stacklevel=2)
+        out, aux = dense_ref(params, x, c)
+        return out, aux, _static_stats("dense", c, fallback=reason)
 
     B, S, d = x.shape
     batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
@@ -231,12 +360,18 @@ def moe_apply(params: dict, x: jax.Array, c: MoEConfig) -> tuple[jax.Array, jax.
         n_batch *= mesh.shape[a]
     if B % max(n_batch, 1):
         batch_axes = ()          # tiny-batch decode: replicate over data axes
+        n_batch = 1
     bspec = batch_axes if batch_axes else None
     wspec = P("model", None, None)
     all_axes = batch_axes + ("model",)
-    impl = c.impl
+    impl, fallback = c.impl, None
     if impl == "noc" and (S < n_ranks or S % n_ranks):
-        impl = "gather"          # decode steps: no sequence axis to shard
+        fallback = (f"impl='noc' needs seq len {S} divisible by model ranks="
+                    f"{n_ranks} (decode-shaped input): using 'gather'")
+        warnings.warn(f"moe_apply: {fallback}", stacklevel=2)
+        impl = "gather"
+
+    B_loc = B // n_batch
 
     def _aux_of(me, ce, axes):
         if axes:
@@ -245,29 +380,67 @@ def moe_apply(params: dict, x: jax.Array, c: MoEConfig) -> tuple[jax.Array, jax.
         return c.n_experts * jnp.sum(me * ce)
 
     if impl == "gather":
+        T = B_loc * S
+        # source blocks == the noc engine's sequence shards when S divides,
+        # so both engines enforce the SAME per-(src, expert) capacity
+        n_blocks = n_ranks if S % n_ranks == 0 else 1
+        blk_of = (jnp.arange(T) % S) // (S // n_blocks)
+
         def fn(xl, wr, wg, wu, wd):
-            T = xl.shape[0] * xl.shape[1]
-            out, (me, ce) = _gather_local(xl.reshape(T, d), wr, wg, wu, wd, c,
-                                          n_ranks, "model")
-            return out.reshape(xl.shape), _aux_of(me, ce, batch_axes)
+            out, (me, ce), (drops, peak) = _gather_local(
+                xl.reshape(T, d), wr, wg, wu, wd, c, n_ranks, "model",
+                blk_of, n_blocks)
+            if batch_axes:       # drops replicated over 'model'; sum replicas
+                drops = lax.psum(drops, batch_axes)
+                peak = lax.pmax(peak, batch_axes)
+            return (out.reshape(xl.shape), _aux_of(me, ce, batch_axes),
+                    drops, peak)
         sm = shard_map(
             fn, mesh=mesh,
             in_specs=(P(bspec, None, None), P(), wspec, wspec, wspec),
-            out_specs=(P(bspec, None, None), P()),
+            out_specs=(P(bspec, None, None), P(), P(), P()),
             check_vma=False)
-        out, aux = sm(x, params["router"].astype(x.dtype), params["gate"].astype(x.dtype),
-                      params["up"].astype(x.dtype), params["down"].astype(x.dtype))
-        return out, aux.reshape(())
+        out, aux, drops, peak = sm(
+            x, params["router"].astype(x.dtype), params["gate"].astype(x.dtype),
+            params["up"].astype(x.dtype), params["down"].astype(x.dtype))
+        stats = _static_stats("gather", c, fallback=fallback,
+                              capacity=dispatch_capacity(T // n_blocks, c),
+                              tokens_per_src=T // n_blocks,
+                              drops=drops, peak=peak)
+        return out, aux.reshape(()), stats
+
+    # impl == "noc": compile the topology's route program once per call site
+    from ..core.routing import compile_routes, route_program_stats
+    from ..core.topology import make_topology
+
+    topo = make_topology(c.noc_topology, n_ranks)
+    prog = compile_routes(topo)
+    ncfg = c.noc or NoCConfig()
+    T_loc = B_loc * (S // n_ranks)
+    cap = dispatch_capacity(T_loc, c)
+    epr = c.n_experts // n_ranks
+    msg_nbytes = epr * cap * d * x.dtype.itemsize   # one (src,dst) token cube
+    sstats = route_program_stats(prog, n_ranks * n_ranks * msg_nbytes)
 
     def fn(xl, wr, wg, wu, wd):
         xl2 = xl.reshape(-1, d)
-        out, (me, ce) = _noc_local(xl2, wr, wg, wu, wd, c, n_ranks, "model")
-        return out.reshape(xl.shape), _aux_of(me, ce, all_axes)
+        out, (me, ce), (drops, peak) = _noc_local(
+            xl2, wr, wg, wu, wd, c, n_ranks, "model", prog, cap)
+        return (out.reshape(xl.shape), _aux_of(me, ce, all_axes),
+                lax.psum(drops, all_axes), lax.pmax(peak, all_axes))
     sm = shard_map(
         fn, mesh=mesh,
         in_specs=(P(bspec, "model", None), P(), wspec, wspec, wspec),
-        out_specs=(P(bspec, "model", None), P()),
+        out_specs=(P(bspec, "model", None), P(), P(), P()),
         check_vma=False)
-    out, aux = sm(x, params["router"].astype(x.dtype), params["gate"].astype(x.dtype),
-                  params["up"].astype(x.dtype), params["down"].astype(x.dtype))
-    return out, aux.reshape(())
+    out, aux, drops, peak = sm(
+        x, params["router"].astype(x.dtype), params["gate"].astype(x.dtype),
+        params["up"].astype(x.dtype), params["down"].astype(x.dtype))
+    stats = _static_stats(
+        "noc", c, fallback=fallback, topology=c.noc_topology, capacity=cap,
+        tokens_per_src=T_loc,
+        # out + back trips of the same program; flits frame all n^2 buffers
+        flits=2 * n_ranks * n_ranks * ncfg.flits_for(msg_nbytes),
+        rounds=2 * sstats.rounds, link_bytes=2 * sstats.link_bytes,
+        drops=drops, peak=peak)
+    return out, aux.reshape(()), stats

@@ -8,8 +8,8 @@ xLSTM m/s pattern) put the heterogeneity inside the period.
 
 API:
   abstract_params(cfg)                  -> ParamSpec tree
-  forward(params, batch, cfg, cache)    -> (logits, aux, new_cache)
-  loss(params, batch, cfg)              -> (scalar, metrics)
+  forward(params, batch, cfg, cache)    -> (logits, aux, new_cache, moe_stats)
+  loss(params, batch, cfg)              -> (scalar, metrics incl. moe_drops)
   init_cache(cfg, batch, max_len)       -> decode cache pytree
   prefill / decode_step                 -> serving entry points
 """
@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..configs.base import ModelConfig
+from ..core.noc import NoCConfig
 from ..core.partition import constrain
 from . import mla as mla_mod
 from . import moe as moe_mod
@@ -67,9 +68,13 @@ def _xlstm_cfg(cfg: ModelConfig) -> xlstm_mod.XLSTMConfig:
 
 
 def _moe_cfg(cfg: ModelConfig) -> moe_mod.MoEConfig:
+    # moe_flit_buffer_depth > 0 attaches a NoCConfig: the CONNECT buffer depth
+    # becomes the capacity knob and capacity_factor is derived from it
+    noc = (NoCConfig(flit_buffer_depth=cfg.moe_flit_buffer_depth)
+           if cfg.moe_flit_buffer_depth else None)
     return moe_mod.MoEConfig(cfg.d_model, cfg.n_experts, cfg.top_k, cfg.d_ff_expert,
                              capacity_factor=cfg.capacity_factor, impl=cfg.moe_impl,
-                             noc_topology=cfg.moe_topology, act=cfg.act)
+                             noc_topology=cfg.moe_topology, act=cfg.act, noc=noc)
 
 
 # ---------------------------------------------------------------------------
@@ -168,6 +173,7 @@ def _norm(x, gamma, cfg: ModelConfig):
 def _apply_sublayer(p, x, cfg: ModelConfig, mixer: str, ffn: str, *,
                     positions, cache, enc_out, causal):
     aux = jnp.zeros((), jnp.float32)
+    moe = (jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))  # (drops, peak)
     h = _norm(x, p["norm1"], cfg)
     if mixer == "attn":
         o, new_cache = attention(p["attn"], h, _attn_cfg(cfg), positions=positions,
@@ -196,17 +202,22 @@ def _apply_sublayer(p, x, cfg: ModelConfig, mixer: str, ffn: str, *,
         x = x + mlp_apply(p["mlp"], h, act="silu" if cfg.act == "silu" else "gelu")
     elif ffn == "moe":
         h = _norm(x, p["norm2"], cfg)
-        o, aux = moe_mod.moe_apply(p["moe"], h, _moe_cfg(cfg))
+        o, aux, st = moe_mod.moe_apply(p["moe"], h, _moe_cfg(cfg))
+        moe = (jnp.asarray(st.drops, jnp.int32),
+               jnp.asarray(st.peak_occupancy, jnp.int32))
         x = x + o
-    return x, new_cache, aux
+    return x, new_cache, aux, moe
 
 
 def _run_stack(blocks, x, cfg: ModelConfig, *, pattern, positions, cache_blocks,
                enc_out, causal):
-    """scan over periods; xs = (stacked period params, stacked period caches)."""
+    """scan over periods; xs = (stacked period params, stacked period caches).
+
+    MoE dispatch stats ride the carry: drops sum over layers, peak-occupancy
+    maxes (the hottest (src, dst) buffer anywhere in the stack)."""
 
     def period_fn(carry, xs):
-        x, aux = carry
+        x, aux, drops, peak = carry
         if cache_blocks is not None:
             pp, pc = xs
         else:
@@ -214,19 +225,24 @@ def _run_stack(blocks, x, cfg: ModelConfig, *, pattern, positions, cache_blocks,
         new_pc = {}
         for i, (mixer, ffn) in enumerate(pattern):
             sub_cache = pc[str(i)] if pc is not None else None
-            x, nc, a = _apply_sublayer(pp[str(i)], x, cfg, mixer, ffn,
-                                       positions=positions, cache=sub_cache,
-                                       enc_out=enc_out, causal=causal)
+            x, nc, a, (dr, pk) = _apply_sublayer(pp[str(i)], x, cfg, mixer, ffn,
+                                                 positions=positions, cache=sub_cache,
+                                                 enc_out=enc_out, causal=causal)
             new_pc[str(i)] = nc if nc is not None else ()
             aux = aux + a
+            drops = drops + dr
+            peak = jnp.maximum(peak, pk)
         x = constrain(x, ("batch", "seq", "embed"))
-        return (x, aux), (new_pc if pc is not None else 0)
+        return (x, aux, drops, peak), (new_pc if pc is not None else 0)
 
     body = jax.checkpoint(period_fn) if cfg.remat else period_fn
     xs = (blocks, cache_blocks) if cache_blocks is not None else blocks
-    (x, aux), new_caches = lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs,
-                                    unroll=cfg.n_periods if cfg.analysis_unroll else 1)
-    return x, aux, (new_caches if cache_blocks is not None else None)
+    carry0 = (x, jnp.zeros((), jnp.float32),
+              jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+    (x, aux, drops, peak), new_caches = lax.scan(
+        body, carry0, xs, unroll=cfg.n_periods if cfg.analysis_unroll else 1)
+    moe_stats = {"moe_drops": drops, "moe_peak_occupancy": peak}
+    return x, aux, (new_caches if cache_blocks is not None else None), moe_stats
 
 
 def _embed_tokens(params, tokens, cfg: ModelConfig):
@@ -247,15 +263,20 @@ def encode(params, frames, cfg: ModelConfig):
     x = frames.astype(cfg.cdtype) @ params["frontend"].astype(cfg.cdtype)
     pos = jnp.arange(x.shape[1])[None, :]
     x = x + _sinusoidal(pos, cfg.d_model, x.dtype)
-    x, _, _ = _run_stack(params["enc_blocks"], x, cfg, pattern=(("attn", "mlp"),),
-                         positions=jnp.broadcast_to(pos, x.shape[:2]),
-                         cache_blocks=None, enc_out=None, causal=False)
+    x, _, _, _ = _run_stack(params["enc_blocks"], x, cfg, pattern=(("attn", "mlp"),),
+                            positions=jnp.broadcast_to(pos, x.shape[:2]),
+                            cache_blocks=None, enc_out=None, causal=False)
     return _norm(x, params["enc_norm"], cfg)
 
 
 def forward(params: dict, batch: dict, cfg: ModelConfig,
-            cache: Optional[dict] = None) -> tuple[jax.Array, jax.Array, Optional[dict]]:
-    """-> (logits (B,S,V), aux_loss, new_cache)."""
+            cache: Optional[dict] = None
+            ) -> tuple[jax.Array, jax.Array, Optional[dict], dict]:
+    """-> (logits (B,S,V), aux_loss, new_cache, moe_stats).
+
+    ``moe_stats``: {"moe_drops", "moe_peak_occupancy"} — capacity-dropped
+    tokens summed over MoE layers and the hottest per-(src, dst) dispatch
+    buffer, straight from `moe.MoEDispatchStats` (zeros for dense archs)."""
     tokens = batch["tokens"]
     B, S = tokens.shape
     pos0 = cache["pos"] if cache is not None else 0
@@ -278,9 +299,9 @@ def forward(params: dict, batch: dict, cfg: ModelConfig,
 
     x = constrain(x, ("batch", "seq", "embed"))
     cache_blocks = cache["blocks"] if cache is not None else None
-    x, aux, new_blocks = _run_stack(params["blocks"], x, cfg, pattern=cfg.pattern,
-                                    positions=positions, cache_blocks=cache_blocks,
-                                    enc_out=enc_out, causal=True)
+    x, aux, new_blocks, moe_stats = _run_stack(
+        params["blocks"], x, cfg, pattern=cfg.pattern, positions=positions,
+        cache_blocks=cache_blocks, enc_out=enc_out, causal=True)
     x = _norm(x, params["final_norm"], cfg)
     if cfg.family == "vlm" and "patches" in batch:
         x = x[:, -tokens.shape[1]:]  # logits only for text positions
@@ -296,14 +317,16 @@ def forward(params: dict, batch: dict, cfg: ModelConfig,
         new_cache = {"blocks": new_blocks, "pos": pos0 + S}
         if cfg.family == "encdec":
             new_cache["enc_out"] = enc_out
-    return logits, aux, new_cache
+    return logits, aux, new_cache, moe_stats
 
 
 def loss(params: dict, batch: dict, cfg: ModelConfig):
-    logits, aux, _ = forward(params, batch, cfg)
+    logits, aux, _, moe_stats = forward(params, batch, cfg)
     nll = cross_entropy(logits, batch["labels"])
     total = nll + cfg.aux_weight * aux
-    return total, {"nll": nll, "aux": aux}
+    # f32 so downstream metric pmean/averaging is well-defined
+    mets = {k: v.astype(jnp.float32) for k, v in moe_stats.items()}
+    return total, {"nll": nll, "aux": aux, **mets}
 
 
 # ---------------------------------------------------------------------------
@@ -311,11 +334,11 @@ def loss(params: dict, batch: dict, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 def prefill(params: dict, batch: dict, cfg: ModelConfig, cache: dict):
-    logits, _, cache = forward(params, batch, cfg, cache)
+    logits, _, cache, _ = forward(params, batch, cfg, cache)
     return logits[:, -1:], cache
 
 
 def decode_step(params: dict, batch: dict, cfg: ModelConfig, cache: dict):
     """batch["tokens"]: (B, 1) — one new token against the cache."""
-    logits, _, cache = forward(params, batch, cfg, cache)
+    logits, _, cache, _ = forward(params, batch, cfg, cache)
     return logits[:, -1], cache

@@ -7,7 +7,8 @@ from tests.conftest import run_with_devices
 
 @pytest.mark.slow
 def test_moe_engines_agree_across_mesh():
-    """gather / noc engines == dense oracle on a (data=2, model=4) mesh."""
+    """gather + noc engines (ALL 4 topologies) == dense oracle on a
+    (data=2, model=4) mesh, with drop-free dispatch stats."""
     run_with_devices("""
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import Mesh
@@ -16,19 +17,27 @@ from repro.models import moe as M
 from repro.models.layers import init_params
 mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
 rng = np.random.default_rng(0)
-cfgs = {impl: M.MoEConfig(d_model=32, n_experts=8, top_k=2, d_ff=64,
-                          capacity_factor=8.0, impl=impl)
-        for impl in ("dense", "gather", "noc")}
-params = init_params(M.moe_specs(cfgs["dense"]), jax.random.key(0))
+dense = M.MoEConfig(d_model=32, n_experts=8, top_k=2, d_ff=64,
+                    capacity_factor=8.0, impl="dense")
+params = init_params(M.moe_specs(dense), jax.random.key(0))
 x = jnp.asarray(rng.normal(size=(4, 16, 32)), jnp.float32)
+engines = [M.MoEConfig(32, 8, 2, 64, capacity_factor=8.0, impl="gather")]
+engines += [M.MoEConfig(32, 8, 2, 64, capacity_factor=8.0, impl="noc",
+                        noc_topology=t)
+            for t in ("fattree", "ring", "mesh2d", "torus2d")]
 with set_mesh(mesh):
-    ref, aux_ref = M.moe_apply(params, x, cfgs["dense"])
-    for impl in ("gather", "noc"):
-        out, aux = M.moe_apply(params, x, cfgs[impl])
+    ref, aux_ref, _ = M.moe_apply(params, x, dense)
+    for c in engines:
+        out, aux, st = M.moe_apply(params, x, c)
+        tag = (c.impl, c.noc_topology)
         err = float(jnp.max(jnp.abs(out - ref)))
-        assert err < 1e-4, (impl, err)
+        assert err < 1e-4, (tag, err)
         # capacity 8x => no drops => exact combine; aux equal too
-        assert abs(float(aux) - float(aux_ref)) < 1e-4, impl
+        assert abs(float(aux) - float(aux_ref)) < 1e-4, tag
+        assert int(st.drops) == 0 and st.fallback is None, tag
+        if c.impl == "noc":
+            assert st.engine == "noc" and st.topology == c.noc_topology
+            assert st.rounds > 0 and st.flits > 0 and st.link_bytes > 0
 print("OK")
 """, n_devices=8)
 
@@ -48,9 +57,10 @@ ring = M.MoEConfig(32, 8, 2, 64, capacity_factor=8.0, impl="noc", noc_topology="
 params = init_params(M.moe_specs(dense), jax.random.key(0))
 x = jnp.asarray(rng.normal(size=(2, 8, 32)), jnp.float32)
 with set_mesh(mesh):
-    ref, _ = M.moe_apply(params, x, dense)
-    out, _ = M.moe_apply(params, x, ring)
+    ref, _, _ = M.moe_apply(params, x, dense)
+    out, _, st = M.moe_apply(params, x, ring)
 assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
+assert st.rounds == 2 * 3   # ring(4) unidir: 3 rounds out + 3 back
 print("OK")
 """, n_devices=4)
 

@@ -117,3 +117,26 @@ def test_wrapper_overhead_accounting():
         assert r["with_wrapper_bytes"] > r["wo_wrapper_bytes"] * 0  # framed
         assert r["flit_bytes"] >= r["wo_wrapper_bytes"]            # padding >= payload
         assert r["overhead"] >= 0
+
+
+def test_wrapper_overhead_non_byte_multiple_flit_width():
+    """Regression: FIFO/flit byte accounting must CEIL the per-flit byte
+    size.  A 12-bit flit occupies 2 bytes of storage; truncating division
+    (12 // 8 == 1) silently under-counted every non-byte-multiple width."""
+    g, _ = _diamond_graph()
+    cfg = NoCConfig(flit_data_width=12, flit_buffer_depth=8)
+    assert cfg.flit_wire_bytes == 2                 # ceil(12 / 8)
+    rows = wrapper_overhead(g, cfg)
+    for r, r16 in zip(rows, wrapper_overhead(g, NoCConfig(flit_data_width=16,
+                                                          flit_buffer_depth=8))):
+        # FIFO storage: depth x ports x ceil(width/8) — same as the 16-bit
+        # config (both are 2-byte flits), NOT half of it
+        assert r["fifo_bytes"] == r16["fifo_bytes"], r["pe"]
+        assert r["fifo_bytes"] % cfg.flit_wire_bytes == 0
+        # framed size uses the 2-byte wire flit: a 12-bit flit carries one
+        # payload byte, so every payload byte occupies exactly 2 on the wire
+        assert r["flit_bytes"] == 2 * r["wo_wrapper_bytes"], r["pe"]
+    # sub-byte widths must not divide by zero and still frame every byte
+    tiny = NoCConfig(flit_data_width=4, flit_buffer_depth=2)
+    assert tiny.flit_wire_bytes == 1
+    assert tiny.flits_for(5) == 5

@@ -31,7 +31,7 @@ def test_arch_smoke_forward_and_train_step(arch, rng):
     params = init_params(T.abstract_params(cfg), jax.random.key(0))
     B, S = 2, 16
     batch = _batch_for(cfg, B, S, rng)
-    logits, aux, _ = T.forward(params, batch, cfg)
+    logits, aux, _, _ = T.forward(params, batch, cfg)
     assert logits.shape == (B, S, cfg.vocab)
     assert bool(jnp.all(jnp.isfinite(logits))), arch
     # one full train step: loss + grads finite, params change
@@ -62,7 +62,7 @@ def test_serve_matches_forward(arch, rng):
     params = init_params(T.abstract_params(cfg), jax.random.key(1))
     B, S = 2, 12
     batch = _batch_for(cfg, B, S, rng, labels=False)
-    logits_full, _, _ = T.forward(params, batch, cfg)
+    logits_full, _, _, _ = T.forward(params, batch, cfg)
     extra = cfg.n_patches if cfg.family == "vlm" else 0
     cache = T.init_cache(cfg, B, S + extra + 2)
     pre = dict(batch)

@@ -26,8 +26,8 @@ def test_bf16_attention_full_model_close(rng):
     cfg = get_config("llama3.2-1b", smoke=True)
     params = init_params(T.abstract_params(cfg), jax.random.key(0))
     batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32)}
-    base, _, _ = T.forward(params, batch, cfg)
-    opt, _, _ = T.forward(params, batch, cfg.replace(attn_impl="naive",
+    base, _, _, _ = T.forward(params, batch, cfg)
+    opt, _, _, _ = T.forward(params, batch, cfg.replace(attn_impl="naive",
                                                      attn_compute_dtype="bf16"))
     scale = float(jnp.max(jnp.abs(base)))
     assert float(jnp.max(jnp.abs(base - opt))) < 0.05 * max(scale, 1.0)
@@ -39,8 +39,8 @@ def test_serve_param_dtype_bf16(rng):
     params = init_params(T.abstract_params(cfg), jax.random.key(0))
     params_bf = jax.tree.map(lambda a: a.astype(jnp.bfloat16), params)
     batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 12)), jnp.int32)}
-    a, _, _ = T.forward(params, batch, cfg)
-    b, _, _ = T.forward(params_bf, batch, cfg)
+    a, _, _, _ = T.forward(params, batch, cfg)
+    b, _, _, _ = T.forward(params_bf, batch, cfg)
     scale = float(jnp.max(jnp.abs(a)))
     assert float(jnp.max(jnp.abs(a - b.astype(a.dtype)))) < 0.08 * max(scale, 1.0)
 
