@@ -28,6 +28,12 @@ Tables:
                      (== 2x route_program_stats), Table-I-style wrapper
                      framing of the dispatch buffers; re-execs under
                      XLA_FLAGS when single-device.
+  table8_interchip — inter-chip bridge subsystem: BMVM partitioned across pod
+                     cuts over quasi-SERDES links, sweeping cut count ×
+                     wire_bits × compression (multi-FPGA latency/bisection
+                     trade-off), with sim/spmd/analytic parity gates and the
+                     serdes-aware pod-cut co-optimizer; re-execs under
+                     XLA_FLAGS when single-device.
   placement_search — annealing optimize_placement vs round-robin/greedy:
                      Σ traffic×hops cost (and cross-pod cut bytes) for the
                      LDPC / BMVM / particle-filter graphs.
@@ -367,6 +373,113 @@ def table7_moe_noc(fast: bool) -> list[str]:
     return rows
 
 
+def table8_interchip(fast: bool) -> list[str]:
+    """Inter-chip bridge subsystem (paper §III, Fig. 6): the BMVM NoC
+    partitioned across pod cuts over quasi-SERDES links, sweeping cut count ×
+    wire_bits × compression — the multi-FPGA latency/bisection trade-off.
+
+    Gates (CI goes red on drift):
+      * partitioned sim outputs bit-identical to the unpartitioned run, and
+        all non-bridge NoCStats fields identical;
+      * `bridge_program_stats` exactly equals the simulator's BridgeStats;
+      * partitioned spmd == partitioned sim in outputs *and* NoCStats
+        (bridge counters included) on the (pod, node) device mesh.
+    Effective latency = rounds + bridge stall rounds (serialization back-
+    pressure); `cut_wire_bytes` is the message-level serdes framing incl.
+    compression (the co-optimizer's objective term), while `bridge_wire_*`
+    count the lossless flit tunnel.  Re-execs itself with 8 fake CPU devices
+    when run single-device."""
+    n_dev = 8
+    child = _reexec_with_devices("table8_interchip", fast, "_TABLE8_ICHIP_CHILD",
+                                 n_dev)
+    if child is not None:
+        return child
+
+    from repro.apps import bmvm
+    from repro.core import (NoCConfig, bridge_program_stats, compile_bridges,
+                            compile_routes, cut, make_topology, optimize_pod_cut,
+                            place_round_robin, placement_cost,
+                            simulate_bridged_program)
+    from repro.core.interchip import BridgeConfig
+    from repro.core.serdes import QuasiSerdesConfig
+
+    rng = np.random.default_rng(8)
+    cfg = bmvm.BMVMConfig(n=64, k=8, fold=2)           # 4 PEs on 8 NoC nodes
+    A = rng.integers(0, 2, (64, 64)).astype(np.uint8)
+    v = rng.integers(0, 2, (64,)).astype(np.uint8)
+    lut = np.asarray(bmvm.preprocess(A, cfg))
+    g, _ = bmvm.build_bmvm_graph(lut, cfg)
+    sw = bmvm.software_ref(A, v[None], 2)
+    topo = make_topology("mesh", 8)
+    cuts = {2: [0] * 4 + [1] * 4, 4: [0, 0, 1, 1, 2, 2, 3, 3]}
+    wire_sweep = (8, 16) if fast else (8, 16, 32)
+    comp_sweep = ("none", "bf16")
+    rows = []
+    out_ref, st_ref = bmvm.iterate_noc_sim(jnp.asarray(lut), v, cfg, 2,
+                                           topology="mesh")
+    for n_pods, pods in cuts.items():
+        for wb in wire_sweep:
+            for comp in comp_sweep:
+                scfg = QuasiSerdesConfig(wire_bits=wb, lanes=2, compress=comp)
+                t0 = time.monotonic()
+                out, st = bmvm.iterate_noc_sim(jnp.asarray(lut), v, cfg, 2,
+                                               topology="mesh", pods=pods,
+                                               serdes_cfg=scfg)
+                dt = (time.monotonic() - t0) * 1e6
+                # gate 1: the cut is semantically transparent — identical to
+                # the unpartitioned run AND to the software oracle
+                assert np.array_equal(out, out_ref), (n_pods, wb, comp)
+                assert np.array_equal(out.reshape(1, -1), sw), (n_pods, wb, comp)
+                d_ref, d = st_ref.as_dict(), st.as_dict()
+                for k in d_ref:
+                    if not (k.startswith("bridge_") or k.startswith("cross_pod_")):
+                        assert d_ref[k] == d[k], (n_pods, wb, comp, k)
+                # gate 2: analytic bridge stats == simulated, on a raw cube
+                plan = cut(g, place_round_robin(g, topo), pods, scfg)
+                bprog = compile_bridges(compile_routes(topo), plan,
+                                        BridgeConfig(serdes=scfg, fifo_depth=8))
+                cube = rng.integers(0, 255, (8, 8, 16), dtype=np.uint8)
+                _, _, b_sim = simulate_bridged_program(bprog, cube)
+                b_ana = bridge_program_stats(bprog, cube.nbytes)
+                assert b_ana.as_dict() == b_sim.as_dict(), (n_pods, wb, comp)
+                msg_wire = plan.wire_bytes(g)
+                rows.append(
+                    f"table8_interchip_p{n_pods}_w{wb}_{comp},{dt:.0f},"
+                    f"latency_rounds={st.rounds + st.bridge_stall_rounds} "
+                    f"stall_rounds={st.bridge_stall_rounds} "
+                    f"bridge_beats={st.bridge_beats} "
+                    f"bridge_wire_bytes={st.bridge_wire_bytes} "
+                    f"peak_fifo={st.bridge_peak_fifo} "
+                    f"bridges={b_sim.n_bridges} cut_wire_bytes={msg_wire}")
+    # gate 3: spmd differential on the (pod, node) mesh, 2- and 4-pod cuts
+    for n_pods, pods in cuts.items():
+        out_sim, st_sim = bmvm.iterate_noc_sim(jnp.asarray(lut), v, cfg, 2,
+                                               topology="mesh", pods=pods)
+        out_spmd, st_spmd = bmvm.iterate_noc_sim(jnp.asarray(lut), v, cfg, 2,
+                                                 topology="mesh", pods=pods,
+                                                 mode="spmd")
+        assert np.array_equal(out_spmd, out_sim), n_pods
+        assert st_spmd.as_dict() == st_sim.as_dict(), n_pods
+        rows.append(f"table8_interchip_spmd_p{n_pods},0,"
+                    f"stats_identical=True "
+                    f"bridge_beats={st_spmd.bridge_beats} "
+                    f"stall_rounds={st_spmd.bridge_stall_rounds}")
+    # co-optimizer: pod cut × serdes settings under the shared objective
+    grid = [QuasiSerdesConfig(wire_bits=wb, lanes=l, compress=cp)
+            for wb in wire_sweep for l in (1, 8) for cp in comp_sweep]
+    plan, cost = optimize_pod_cut(g, topo, n_pods=2, serdes_grid=grid,
+                                  iters=300 if fast else 1500, seed=0)
+    naive = placement_cost(g, topo, place_round_robin(g, topo),
+                           [0] * 4 + [1] * 4, QuasiSerdesConfig())
+    rows.append(f"table8_coopt,0,cost={cost:.0f} naive={naive:.0f} "
+                f"wire_bits={plan.serdes_cfg.wire_bits} "
+                f"lanes={plan.serdes_cfg.lanes} "
+                f"compress={plan.serdes_cfg.compress} "
+                f"cut_beats={plan.wire_beats(g)}")
+    assert cost <= naive
+    return rows
+
+
 def placement_search(fast: bool) -> list[str]:
     """Annealing placement search vs round-robin/greedy on the app graphs."""
     from repro.apps import bmvm, ldpc
@@ -476,6 +589,7 @@ TABLES = {
     "table5_batched": table5_batched,
     "table6_spmd": table6_spmd,
     "table7_moe_noc": table7_moe_noc,
+    "table8_interchip": table8_interchip,
     "placement_search": placement_search,
     "fig_ldpc": fig_ldpc,
     "fig_pf": fig_pf,

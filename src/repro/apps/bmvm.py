@@ -27,7 +27,8 @@ import jax
 import jax.numpy as jnp
 
 from ..compat import shard_map
-from ..core import NoCExecutor, PE, Port, TaskGraph, make_topology, resolve_placement
+from ..core import (NoCExecutor, PE, Port, TaskGraph, cut, make_topology,
+                    resolve_placement)
 from ..core.routing import all_to_all_for, topology_axes
 from ..kernels import ops as kops
 from ..kernels import ref as kref
@@ -123,18 +124,29 @@ def build_bmvm_graph(lut_np: np.ndarray, cfg: BMVMConfig) -> tuple[TaskGraph, li
 
 def iterate_noc_sim(lut: jax.Array, v_bits: np.ndarray, cfg: BMVMConfig, r: int,
                     topology: Optional[str] = None, n_nodes: Optional[int] = None,
-                    placement="rr", mode: str = "sim"):
+                    placement="rr", mode: str = "sim",
+                    pods: Optional[list[int]] = None, serdes_cfg=None):
     """(decoded vector, NoCStats) — the Table-V measurement path.
 
-    ``placement``: 'rr' | 'greedy' | 'opt' (annealing search) or an explicit
-    PE→node mapping.  ``mode``: any `NoCExecutor.run` mode — ``"spmd"`` runs
-    the same compiled flit program over a device mesh (needs n_nodes
-    devices)."""
+    ``placement``: 'rr' | 'greedy' | 'opt' (annealing search, cut-aware when
+    ``pods`` is given) or an explicit PE→node mapping.  ``mode``: any
+    `NoCExecutor.run` mode — ``"spmd"`` runs the same compiled flit program
+    over a device mesh (needs n_nodes devices).  ``pods`` (node→pod) turns on
+    partitioned execution: cut links run through quasi-SERDES bridge
+    endpoints (``serdes_cfg``), results stay bit-identical and NoCStats gain
+    the ``bridge_*`` counters."""
+    from ..core.serdes import QuasiSerdesConfig
+
     topo_name = topology or cfg.topology
     n_nodes = n_nodes or 2 * cfg.n_pe
     g, feedback = build_bmvm_graph(np.asarray(lut), cfg)
     topo = make_topology(topo_name, n_nodes)
-    ex = NoCExecutor(g, topo, placement=resolve_placement(g, topo, placement))
+    place = resolve_placement(g, topo, placement, pod_of_node=pods,
+                              serdes_cfg=serdes_cfg)
+    plan = None
+    if pods is not None:
+        plan = cut(g, place, pods, serdes_cfg or QuasiSerdesConfig())
+    ex = NoCExecutor(g, topo, placement=place, plan=plan)
     v1 = np.asarray(v_bits).reshape(-1)               # single vector (n,)
     vw = np.asarray(kref.gf2_pack_vector(jnp.asarray(v1), cfg.k), np.uint32)
     f = cfg.fold

@@ -147,20 +147,27 @@ def build_ldpc_graph(H: np.ndarray) -> tuple[TaskGraph, list[tuple[str, str]]]:
 def decode_on_noc(H: np.ndarray, llr: np.ndarray, n_iters: int,
                   topology: str = "mesh", n_nodes: int = 16,
                   pods: Optional[list[int]] = None,
-                  placement="rr", mode: str = "sim"):
+                  placement="rr", mode: str = "sim", serdes_cfg=None):
     """Full paper flow: graph -> placement -> (optional 2-pod cut) -> sim.
 
     ``placement``: 'rr' | 'greedy' | 'opt' (annealing search, cut-aware when
     ``pods`` is given) or an explicit PE→node mapping.  Initial check inputs
     are the channel LLRs of the connected bits (the standard initialization
     u_ij^{(0)} = llr_j).  ``mode``: any `NoCExecutor.run` mode — ``"spmd"``
-    moves the messages over a real device mesh (needs n_nodes devices)."""
+    moves the messages over a real device mesh (needs n_nodes devices).
+    With ``pods`` the decode runs *partitioned*: cut links go through
+    quasi-SERDES bridge endpoints (``serdes_cfg`` — framing/lanes of the
+    inter-chip links), bit-identically to the unpartitioned run, and the
+    returned NoCStats carry the ``bridge_*`` counters."""
+    from ..core.serdes import QuasiSerdesConfig
+
     g, feedback = build_ldpc_graph(H)
     topo = make_topology(topology, n_nodes)
-    placement = resolve_placement(g, topo, placement, pod_of_node=pods)
+    placement = resolve_placement(g, topo, placement, pod_of_node=pods,
+                                  serdes_cfg=serdes_cfg)
     plan = None
     if pods is not None:
-        plan = cut(g, placement, pods)
+        plan = cut(g, placement, pods, serdes_cfg or QuasiSerdesConfig())
     ex = NoCExecutor(g, topo, placement=placement, plan=plan)
     M, N = H.shape
     inputs = {}

@@ -20,7 +20,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..core import NoCExecutor, PE, Port, TaskGraph, make_topology, resolve_placement
+from ..core import (NoCExecutor, PE, Port, TaskGraph, cut, make_topology,
+                    resolve_placement)
 from ..kernels import ops as kops
 from ..kernels import ref as kref
 
@@ -155,15 +156,26 @@ def build_pf_graph(cfg: PFConfig, n_pe: int) -> TaskGraph:
 
 def track_on_noc(frames: np.ndarray, cfg: PFConfig, n_pe: int = 4,
                  topology: str = "mesh", n_nodes: int = 8,
-                 placement="rr", mode: str = "sim"):
+                 placement="rr", mode: str = "sim",
+                 pods: Optional[list[int]] = None, serdes_cfg=None):
     """Paper-faithful NoC execution; returns (centers, total NoCStats).
 
     ``placement``: 'rr' | 'greedy' | 'opt' or an explicit PE→node mapping.
     ``mode``: any `NoCExecutor.run` mode — ``"spmd"`` routes each frame's
-    messages over a real device mesh (needs n_nodes devices)."""
+    messages over a real device mesh (needs n_nodes devices).  ``pods``
+    (node→pod) runs the tracker partitioned across chips: cut links go
+    through quasi-SERDES bridges (``serdes_cfg``) with identical tracks and
+    ``bridge_*`` counters in the stats."""
+    from ..core.serdes import QuasiSerdesConfig
+
     g = build_pf_graph(cfg, n_pe)
     topo = make_topology(topology, n_nodes)
-    ex = NoCExecutor(g, topo, placement=resolve_placement(g, topo, placement))
+    place = resolve_placement(g, topo, placement, pod_of_node=pods,
+                              serdes_cfg=serdes_cfg)
+    plan = None
+    if pods is not None:
+        plan = cut(g, place, pods, serdes_cfg or QuasiSerdesConfig())
+    ex = NoCExecutor(g, topo, placement=place, plan=plan)
     key = jax.random.key(cfg.seed)
     frames_j = jnp.asarray(frames)
     f0 = frames_j[0]
@@ -189,6 +201,5 @@ def track_on_noc(frames: np.ndarray, cfg: PFConfig, n_pe: int = 4,
         if total_stats is None:
             total_stats = stats
         else:
-            for fld in vars(stats):
-                setattr(total_stats, fld, getattr(total_stats, fld) + getattr(stats, fld))
+            total_stats.add(stats)   # peak counters merge by max, flows sum
     return np.stack(centers), total_stats

@@ -5,14 +5,19 @@ topology   — CONNECT-analog virtual topologies (ring/mesh/torus/fat-tree)
 routing    — topology schedules as shard_map collectives + numpy simulator
 serdes     — quasi-SERDES cut-link endpoints (framing + compression)
 partition  — phase-2 placement, pod cutting, sharding rules, cross-pod sync
+interchip  — bridge subsystem: compiled route programs across pod cuts
 noc        — the executor + flit accounting (Tables I–V analogs)
 """
 from .graph import PE, Channel, GraphError, Port, TaskGraph
+from .interchip import (BridgeConfig, BridgedProgram, BridgeLink, BridgeStats,
+                        PodProgram, bridge_program_stats, compile_bridges,
+                        run_bridged_program, simulate_bridged_program)
 from .noc import NoCConfig, NoCExecutor, NoCStats, wrapper_overhead
-from .partition import (DEFAULT_RULES, PartitionPlan, constrain, cross_pod_mean, cut,
-                        logical_to_spec, mesh_for_topology, named_sharding,
-                        node_device_coords, optimize_placement, place_greedy,
-                        place_round_robin, placement_cost,
+from .partition import (DEFAULT_RULES, PartitionPlan, candidate_cuts, constrain,
+                        cross_pod_mean, cut, logical_to_spec, mesh_for_partition,
+                        mesh_for_topology, named_sharding, node_device_coords,
+                        optimize_placement, optimize_pod_cut, pair_cut_weights,
+                        place_greedy, place_round_robin, placement_cost,
                         placement_to_device_coords, resolve_placement)
 from .routing import (RouteProgram, all_to_all_for, compile_routes,
                       crossbar_all_to_all, grid_all_to_all, line_all_to_all,
@@ -20,7 +25,7 @@ from .routing import (RouteProgram, all_to_all_for, compile_routes,
                       run_route_program, simulate_route_program,
                       simulate_schedule, topology_axes, transpose_oracle)
 from .serdes import (LinkMeta, QuasiSerdesConfig, compression_ratio, decode, encode,
-                     link_bytes_on_wire, plan, send_over_link)
+                     link_bytes_on_wire, link_wire_beats, plan, send_over_link)
 from .topology import (AxisSchedule, FatTree, Mesh2D, Ring, Topology, Torus2D,
                        bwd_pairs, compare, fwd_pairs, make_topology)
 

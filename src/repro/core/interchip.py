@@ -1,0 +1,497 @@
+"""Inter-chip bridge subsystem: compiled route programs across pod cuts.
+
+The paper's last automated step (§III, Fig. 6) partitions the "on-chip" NoC
+links so the same application runs seamlessly across chips/FPGAs, with each
+cut link realized over a narrow quasi-serial connection.  This module is that
+step for the compiled flit programs: it takes any `routing.RouteProgram` plus
+a `partition.PartitionPlan` and splits it into **per-pod programs joined by
+explicit bridge nodes** — one `BridgeLink` per directed physical topology
+link the schedule drives across the cut.  Every pod-crossing hop funnels its
+rotating-buffer traffic through a `QuasiSerdesConfig`-framed serial link that
+time-multiplexes the wide on-chip flits onto ``lanes`` narrow beats, with a
+FIFO-depth and bandwidth model per bridge.
+
+Three interpreters share the compiled `BridgedProgram`, mirroring the engine
+contract of `core.routing`:
+
+* :func:`simulate_bridged_program` — numpy round-by-round execution that
+  physically serializes every crossing buffer into wire words and back
+  (lossless framing, so delivery is bit-identical to the unpartitioned
+  `routing.simulate_route_program`) and *defines* :class:`BridgeStats`:
+  per-bridge beats, serialized wire bytes, stall rounds (back-pressure +
+  drain), and peak FIFO occupancy;
+* :func:`bridge_program_stats` — analytic stats from the static traversal
+  schedule, exactly matching the simulator (the spmd executor uses this so
+  partitioned NoCStats never need a numpy re-run);
+* :func:`run_bridged_program` — the shard_map lowering: the program runs
+  *linearized* over the device mesh built by `partition.mesh_for_partition`
+  (a 2D ``(pod, node)`` mesh when the plan's pods are equal contiguous
+  blocks), intra-pod hops stay single `lax.ppermute` rounds while cut hops
+  go through `serdes.send_over_link` — encode, ``lanes`` serialized beat
+  ppermutes, decode — the same machinery `launch.steps.grads_serdes` uses
+  for the cross-pod gradient exchange.
+
+Bridge cost model
+-----------------
+A bridge serializes each crossing buffer into ``ceil(bytes / beat_bytes)``
+wire words, padded to a multiple of ``lanes`` (the serdes framing rule of
+`serdes.plan`).  Words enqueue into the bridge FIFO in the NoC round they
+arrive; the bridge drains one word per lane per round (``lanes`` words/round).
+Occupancy beyond ``fifo_depth`` back-pressures the pod-synchronous schedule —
+those are stall rounds, as is the final drain after the last program round.
+``beats`` counts serial-lane clock cycles spent transmitting
+(``words / lanes`` per crossing, exact after padding).  The data path is
+always lossless (compression is a *planning* knob for the cut objective —
+see `partition.placement_cost` / `partition.optimize_pod_cut` — never a
+transform of in-flight flit bytes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import serdes as qserdes
+from .partition import PartitionPlan
+from .routing import RouteProgram, ScheduleStats, run_route_program
+
+
+@dataclasses.dataclass(frozen=True)
+class BridgeConfig:
+    """Per-bridge serial-link model: serdes framing + FIFO depth (in wire
+    words).  ``serdes.compress`` only shapes planning costs; the bridge data
+    path always moves the exact flit bytes."""
+
+    serdes: qserdes.QuasiSerdesConfig = dataclasses.field(
+        default_factory=qserdes.QuasiSerdesConfig)
+    fifo_depth: int = 64
+
+    def __post_init__(self):
+        assert self.fifo_depth >= 1
+
+
+@dataclasses.dataclass(frozen=True)
+class BridgeLink:
+    """One directed physical topology link cut by the partition — the
+    'explicit bridge node' pair stitched between the per-pod programs."""
+
+    src: int
+    dst: int
+    src_pod: int
+    dst_pod: int
+
+
+@dataclasses.dataclass(frozen=True)
+class BridgedRound:
+    """One NoC round of the partitioned schedule: physical link traversals
+    split at the cut.  Every traversal moves ``cube_nbytes // den`` bytes."""
+
+    den: int
+    intra: tuple[tuple[int, int], ...]     # on-chip (src, dst) node pairs
+    cross: tuple[int, ...]                 # bridge indices carrying traffic
+
+
+@dataclasses.dataclass(frozen=True)
+class PodProgram:
+    """The per-pod view of the split schedule: the hops that stay on this
+    chip plus the bridges stitched to its boundary."""
+
+    pod: int
+    nodes: tuple[int, ...]
+    rounds: tuple[tuple[tuple[int, int], ...], ...]   # intra hops per round
+    egress: tuple[int, ...]                # bridge indices leaving this pod
+    ingress: tuple[int, ...]               # bridge indices entering this pod
+
+
+@dataclasses.dataclass(frozen=True)
+class BridgedProgram:
+    """A RouteProgram split across a pod cut: per-pod programs + bridges."""
+
+    prog: RouteProgram
+    pod_of_node: tuple[int, ...]
+    bridges: tuple[BridgeLink, ...]
+    rounds: tuple[BridgedRound, ...]
+    pods: tuple[PodProgram, ...]
+    cfg: BridgeConfig
+    wire_cfg: qserdes.QuasiSerdesConfig    # cfg.serdes with compression off
+
+    @property
+    def n_pods(self) -> int:
+        return len(self.pods)
+
+
+@dataclasses.dataclass
+class BridgeStats:
+    """Serial-link accounting of one partitioned execution (value-independent;
+    defined by the round-by-round simulator, matched exactly by
+    :func:`bridge_program_stats`)."""
+
+    n_bridges: int = 0
+    beats: int = 0            # serial-lane clock cycles spent transmitting
+    wire_bytes: int = 0       # serialized bytes incl. word/lane padding
+    stall_rounds: int = 0     # back-pressure + final-drain rounds
+    peak_fifo: int = 0        # max FIFO occupancy over bridges, in wire words
+    per_bridge: dict = dataclasses.field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# compile: split a RouteProgram at the cut
+# ---------------------------------------------------------------------------
+
+def _walk_rounds(prog: RouteProgram) -> Iterator[tuple[int, list[tuple[int, int]]]]:
+    """Yield ``(den, physical (src, dst) link traversals)`` per NoC round, in
+    execution order.  Axis-local hop pairs are expanded to global node ids
+    (every row/column of a 2D phase concurrently); each traversal moves
+    ``cube_nbytes // den`` bytes of the wave's message cube."""
+    n = prog.n_nodes
+    if prog.fused:
+        yield n * n, [(s, d) for s in range(n) for d in range(n) if s != d]
+        return
+    if len(prog.phases) == 1:
+        for rnd in prog.phases[0].rounds:
+            yield n, [p for mv in rnd.moves for p in mv.perm]
+        return
+    (_, ry), (_, rx) = prog.axes
+    phase_x, phase_y = prog.phases
+    for rnd in phase_x.rounds:
+        yield n, [(y * rx + s, y * rx + d)
+                  for mv in rnd.moves for s, d in mv.perm for y in range(ry)]
+    for rnd in phase_y.rounds:
+        yield n, [(s * rx + x, d * rx + x)
+                  for mv in rnd.moves for s, d in mv.perm for x in range(rx)]
+
+
+def compile_bridges(prog: RouteProgram, plan: PartitionPlan,
+                    cfg: Optional[BridgeConfig] = None) -> BridgedProgram:
+    """Split a compiled route program at a partition plan's pod cut."""
+    pod_of = tuple(plan.pod_of_node)
+    if len(pod_of) != prog.n_nodes:
+        raise ValueError(f"plan covers {len(pod_of)} nodes, "
+                         f"program has {prog.n_nodes}")
+    cfg = cfg or BridgeConfig(serdes=plan.serdes_cfg)
+    wire_cfg = dataclasses.replace(cfg.serdes, compress="none")
+    bridges: list[BridgeLink] = []
+    bridge_of: dict[tuple[int, int], int] = {}
+    rounds: list[BridgedRound] = []
+    for den, pairs in _walk_rounds(prog):
+        intra, cross = [], []
+        for s, d in pairs:
+            if pod_of[s] == pod_of[d]:
+                intra.append((s, d))
+            else:
+                if (s, d) not in bridge_of:
+                    bridge_of[(s, d)] = len(bridges)
+                    bridges.append(BridgeLink(s, d, pod_of[s], pod_of[d]))
+                cross.append(bridge_of[(s, d)])
+        rounds.append(BridgedRound(den, tuple(intra), tuple(cross)))
+    n_pods = max(pod_of) + 1 if pod_of else 1
+    pods = tuple(
+        PodProgram(
+            p,
+            tuple(i for i in range(prog.n_nodes) if pod_of[i] == p),
+            tuple(tuple(pr for pr in r.intra if pod_of[pr[0]] == p)
+                  for r in rounds),
+            tuple(i for i, b in enumerate(bridges) if b.src_pod == p),
+            tuple(i for i, b in enumerate(bridges) if b.dst_pod == p),
+        )
+        for p in range(n_pods))
+    return BridgedProgram(prog, pod_of, tuple(bridges), tuple(rounds), pods,
+                          cfg, wire_cfg)
+
+
+# ---------------------------------------------------------------------------
+# bridge FIFO / bandwidth model (shared by simulator and analytic stats)
+# ---------------------------------------------------------------------------
+
+class _BridgeSim:
+    """FIFO + serialization model of every bridge, advanced round by round.
+    Both the numpy simulator and the analytic stats drive this same machine
+    from the same arrival schedule — which is what makes them exact.
+
+    Per bridge and round: crossing frames land in the upstream router output
+    (``pending``); the FIFO admits from it up to ``fifo_depth`` and transmits
+    one word per lane.  While any upstream words remain un-admitted after the
+    scheduled round, the synchronous schedule *stalls* (back-pressure — the
+    slowest bridge gates every pod), repeating admit+transmit rounds; the
+    final FIFO drain after the last program round stalls the same way.  Total
+    stall rounds are bandwidth-limited (≈ words/lanes beyond what the
+    schedule hides) and therefore depth-invariant; the FIFO depth bounds
+    ``peak_fifo`` and decides *where* the stalls land (spread through the
+    schedule vs. one terminal drain)."""
+
+    def __init__(self, bprog: BridgedProgram):
+        self.cfg = bprog.cfg
+        self.keys = [(b.src, b.dst) for b in bprog.bridges]
+        self.links = [dict(occ=0, pending=0, peak=0, words=0, beats=0, stalls=0)
+                      for _ in bprog.bridges]
+        self.stall_rounds = 0
+
+    def words_for(self, nbytes: int) -> int:
+        """Wire words one crossing of ``nbytes`` occupies: ceil to whole
+        words, padded so the frame splits evenly into lanes (serdes rule)."""
+        s = self.cfg.serdes
+        n_words = -(-nbytes // s.beat_bytes)
+        return -(-n_words // s.lanes) * s.lanes
+
+    def push(self, bridge_idx: int, nbytes: int) -> None:
+        s = self.cfg.serdes
+        w = self.words_for(nbytes)
+        l = self.links[bridge_idx]
+        l["pending"] += w
+        l["words"] += w
+        l["beats"] += w // s.lanes
+
+    def _admit_transmit(self, l: dict) -> None:
+        take = min(l["pending"], self.cfg.fifo_depth - l["occ"])
+        l["occ"] += take
+        l["pending"] -= take
+        l["peak"] = max(l["peak"], l["occ"])
+        l["occ"] = max(0, l["occ"] - self.cfg.serdes.lanes)
+
+    def end_round(self) -> None:
+        round_stall = 0
+        for l in self.links:
+            self._admit_transmit(l)
+            s = 0
+            while l["pending"]:
+                self._admit_transmit(l)
+                s += 1
+            l["stalls"] += s
+            round_stall = max(round_stall, s)
+        self.stall_rounds += round_stall
+
+    def finish(self) -> BridgeStats:
+        lanes = self.cfg.serdes.lanes
+        beat_b = self.cfg.serdes.beat_bytes
+        drain = 0
+        for l in self.links:
+            s = -(-l["occ"] // lanes)
+            l["stalls"] += s
+            l["occ"] = 0
+            drain = max(drain, s)
+        self.stall_rounds += drain
+        per = {k: dict(beats=l["beats"], wire_bytes=l["words"] * beat_b,
+                       stall_rounds=l["stalls"], peak_fifo=l["peak"])
+               for k, l in zip(self.keys, self.links)}
+        return BridgeStats(
+            n_bridges=len(self.links),
+            beats=sum(l["beats"] for l in self.links),
+            wire_bytes=sum(l["words"] for l in self.links) * beat_b,
+            stall_rounds=self.stall_rounds,
+            peak_fifo=max((l["peak"] for l in self.links), default=0),
+            per_bridge=per)
+
+
+def bridge_program_stats(bprog: BridgedProgram, cube_nbytes: int) -> BridgeStats:
+    """Analytic BridgeStats for moving one ``cube_nbytes`` message cube
+    through a bridged program — exactly what :func:`simulate_bridged_program`
+    counts (same arrival schedule, same FIFO machine, no data moved)."""
+    sim = _BridgeSim(bprog)
+    for rnd in bprog.rounds:
+        per = cube_nbytes // rnd.den
+        for bidx in rnd.cross:
+            sim.push(bidx, per)
+        sim.end_round()
+    return sim.finish()
+
+
+# ---------------------------------------------------------------------------
+# numpy round-by-round simulator (physical serialization, no devices)
+# ---------------------------------------------------------------------------
+
+def _np_wire_dtype(bits: int):
+    return {8: np.uint8, 16: np.uint16, 32: np.uint32}[bits]
+
+
+def _wire_roundtrip(seg: np.ndarray, br: _BridgeSim, bridge_idx: int) -> np.ndarray:
+    """Physically serialize one crossing buffer: bytes → padded wire words
+    (the beats on the narrow link) → bytes.  Lossless by construction; the
+    round trip is what the far endpoint reconstructs."""
+    s = br.cfg.serdes
+    flat = np.ascontiguousarray(seg).reshape(-1)
+    n_words = br.words_for(flat.nbytes)
+    padded = np.zeros(n_words * s.beat_bytes, np.uint8)
+    padded[:flat.nbytes] = flat
+    words = padded.view(_np_wire_dtype(s.wire_bits))
+    br.push(bridge_idx, flat.nbytes)
+    back = words.view(np.uint8)[:flat.nbytes]
+    return back.reshape(seg.shape)
+
+
+def _np_line_bridged(buf: np.ndarray, phase, phys, pod_of, bridge_of,
+                     br: _BridgeSim, stats: ScheduleStats) -> np.ndarray:
+    """`routing._np_line_compiled` with the hop transport split at the cut.
+
+    ``buf``: (m, m, R, k) — (axis holder, axis destination, physical row,
+    payload bytes); ``phys(row, axis_pos)`` maps to the global node id, so
+    each (s, d) hop of the axis perm becomes R physical link traversals."""
+    m = phase.sched.size
+    R = buf.shape[2]
+    out = np.zeros_like(buf)
+    for i in range(m):
+        out[i, i] = buf[i, i]
+    bufs = [buf.copy(), buf.copy()]
+    for rnd in phase.rounds:
+        stats.rounds += 1
+        for mv in rnd.moves:
+            cur = bufs[mv.buf]
+            nxt = np.zeros_like(cur)
+            for s, d in mv.perm:
+                for r in range(R):
+                    seg = cur[s, :, r]
+                    sn, dn = phys(r, s), phys(r, d)
+                    if pod_of[sn] != pod_of[dn]:
+                        seg = _wire_roundtrip(seg, br, bridge_of[(sn, dn)])
+                    nxt[d, :, r] = seg
+                    stats.link_bytes += seg.nbytes
+            bufs[mv.buf] = nxt
+            for i in range(m):
+                if mv.src_table[i] >= 0:
+                    out[i, mv.src_table[i]] = bufs[mv.buf][i, i]
+        br.end_round()
+    return out
+
+
+def simulate_bridged_program(bprog: BridgedProgram, msgs: np.ndarray, *,
+                             batched: bool = False,
+                             ) -> tuple[np.ndarray, ScheduleStats, BridgeStats]:
+    """Round-by-round numpy execution of a partitioned program (no devices).
+
+    msgs: (n_src, n_dst, *c) → (delivered (n_dst, n_src, *c), schedule stats,
+    bridge stats).  Delivery and ScheduleStats are bit-identical to the
+    unpartitioned `routing.simulate_route_program` — the cut is semantically
+    transparent ("seamless" per the paper); only the BridgeStats record what
+    the serial links did.  ``batched=True`` folds a leading batch axis into
+    the payload (rounds counted once, bytes scale with B), mirroring
+    `routing.simulate_schedule`."""
+    if batched:
+        assert msgs.ndim >= 3, "batched msgs must be (B, n_src, n_dst, *c)"
+        inner = np.ascontiguousarray(np.moveaxis(msgs, 0, 2))
+        delivered, stats, bstats = simulate_bridged_program(bprog, inner)
+        return (np.ascontiguousarray(np.moveaxis(delivered, 2, 0)), stats,
+                bstats)
+    prog = bprog.prog
+    n = prog.n_nodes
+    assert msgs.shape[0] == n and msgs.shape[1] == n
+    pod_of = bprog.pod_of_node
+    bridge_of = {(b.src, b.dst): i for i, b in enumerate(bprog.bridges)}
+    stats = ScheduleStats()
+    br = _BridgeSim(bprog)
+    raw = np.ascontiguousarray(msgs)
+    byte = raw.view(np.uint8).reshape(n, n, -1)
+    k = byte.shape[2]
+
+    def unview(b: np.ndarray) -> np.ndarray:
+        return (np.ascontiguousarray(b).view(raw.dtype)
+                .reshape((n, n) + raw.shape[2:]))
+
+    if prog.fused:
+        # single crossbar round: every (s, d) chunk crosses its link directly
+        out = byte.swapaxes(0, 1).copy()
+        stats.rounds = 1
+        stats.link_bytes = int(byte.nbytes * (n - 1) / n)
+        for (s, d), bidx in sorted(bridge_of.items()):
+            out[d, s] = _wire_roundtrip(out[d, s], br, bidx)
+        br.end_round()
+        return unview(out), stats, br.finish()
+    if len(prog.phases) == 1:
+        out = _np_line_bridged(byte.reshape(n, n, 1, k), prog.phases[0],
+                               lambda r, i: i, pod_of, bridge_of, br, stats)
+        return unview(out.reshape(n, n, k)), stats, br.finish()
+    # 2D XY routing — same factorized data motion as simulate_route_program,
+    # with the physical row kept explicit so each hop splits at the cut
+    (_, ry), (_, rx) = prog.axes
+    phase_x, phase_y = prog.phases
+    m = byte.reshape(ry, rx, ry, rx, k)
+    b = np.moveaxis(m, (1, 3), (0, 1))              # [sx, dx, sy, dy, k]
+    b = _np_line_bridged(np.ascontiguousarray(b).reshape(rx, rx, ry, -1),
+                         phase_x, lambda r, x: r * rx + x,
+                         pod_of, bridge_of, br, stats)
+    b = b.reshape(rx, rx, ry, ry, k)                # [dx(node), sx, sy, dy, k]
+    b = np.moveaxis(b, (2, 3), (0, 1))              # [sy, dy, dx, sx, k]
+    b = _np_line_bridged(np.ascontiguousarray(b).reshape(ry, ry, rx, -1),
+                         phase_y, lambda r, y: y * rx + r,
+                         pod_of, bridge_of, br, stats)
+    b = b.reshape(ry, ry, rx, rx, k)                # [dy(node), sy, dx, sx, k]
+    out = np.moveaxis(b, (0, 2, 1, 3), (0, 1, 2, 3))
+    return unview(np.ascontiguousarray(out).reshape(n, n, k)), stats, br.finish()
+
+
+# ---------------------------------------------------------------------------
+# shard_map lowering (device-mesh execution of the partitioned program)
+# ---------------------------------------------------------------------------
+
+def _bridged_transfer(bprog: BridgedProgram, axis_name):
+    """Hop transport for `routing.run_route_program(transfer=...)`: intra-pod
+    pairs stay one ppermute; cut pairs go through serdes endpoints — encode,
+    ``lanes`` serialized beat ppermutes, decode (`serdes.send_over_link`,
+    the grads_serdes machinery)."""
+    pod_of = bprog.pod_of_node
+    n = bprog.prog.n_nodes
+
+    def transfer(buf, pairs):
+        intra = [(s, d) for s, d in pairs if pod_of[s] == pod_of[d]]
+        cross = [(s, d) for s, d in pairs if pod_of[s] != pod_of[d]]
+        out = (lax.ppermute(buf, axis_name, intra) if intra
+               else jnp.zeros_like(buf))
+        if cross:
+            rec, _ = qserdes.send_over_link(buf, axis_name, cross,
+                                            bprog.wire_cfg, serialized=True)
+            dst = np.zeros(n, bool)
+            for _, d in cross:
+                dst[d] = True
+            i = lax.axis_index(axis_name)
+            out = jnp.where(jnp.asarray(dst)[i], rec, out)
+        return out
+
+    return transfer
+
+
+def _bridged_crossbar(x: jax.Array, bprog: BridgedProgram, axis_name) -> jax.Array:
+    """Fat-tree/crossbar round split at the cut: intra chunks ride the fused
+    all_to_all; cut chunks are serialized into wire words and the beats move
+    through ``lanes`` separate all_to_alls before per-source decode."""
+    n = bprog.prog.n_nodes
+    pod_of = bprog.pod_of_node
+    cross = np.array([[s != d and pod_of[s] != pod_of[d] for d in range(n)]
+                      for s in range(n)])
+    out = lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0)
+    if not cross.any():
+        return out
+    cfg = bprog.wire_cfg
+    meta = qserdes.plan(x.shape[1:], x.dtype, cfg)
+    enc = jax.vmap(lambda row: qserdes.encode(row, cfg, meta)[0])(x)
+    beats = [lax.all_to_all(enc[:, l], axis_name, split_axis=0, concat_axis=0)
+             for l in range(cfg.lanes)]
+    words = jnp.stack(beats, axis=1)                # (n_src, lanes, w)
+    zero_scales = jnp.zeros((cfg.lanes, 0), words.dtype)
+    dec = jax.vmap(lambda w: qserdes.decode(w, zero_scales, cfg, meta))(words)
+    i = lax.axis_index(axis_name)
+    mask = jnp.asarray(cross)[:, i].reshape((n,) + (1,) * (x.ndim - 1))
+    return jnp.where(mask, dec, out)
+
+
+def run_bridged_program(x: jax.Array, bprog: BridgedProgram,
+                        axis_name) -> jax.Array:
+    """Execute a partitioned program inside ``shard_map``.
+
+    Same per-device contract as `routing.run_route_program` — ``x`` is the
+    ``(n, *chunk)`` destination-indexed view, returns the source-indexed
+    received view — but always *linearized* over ``axis_name`` (a mesh axis
+    name or tuple, e.g. ``("pod", "node")`` from `partition.mesh_for_partition`
+    where the flat device index IS the global NoC node id).  Intra-pod hops
+    are plain ppermute rounds; pod-crossing hops move through quasi-SERDES
+    endpoints.  Bit-identical to the unpartitioned program by construction
+    (the wire framing is lossless)."""
+    if bprog.prog.fused:
+        return _bridged_crossbar(x, bprog, axis_name)
+    return run_route_program(x, bprog.prog, axis_name=axis_name,
+                             transfer=_bridged_transfer(bprog, axis_name))

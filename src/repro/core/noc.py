@@ -34,6 +34,32 @@ The contract between the modes: ``direct`` defines values, ``sim`` defines
 values + flit/round accounting, ``spmd`` must reproduce both bit-for-bit while
 actually moving bytes between devices.
 
+Partitioned execution (``plan=``) — the inter-chip contract
+-----------------------------------------------------------
+Passing a `partition.PartitionPlan` turns on the paper's last automated step:
+the compiled route program is split at the pod cut into per-pod programs
+joined by explicit bridge endpoints (`core.interchip`).  Every pod-crossing
+hop funnels its traffic through a quasi-SERDES serial link that
+time-multiplexes the wide on-chip flits onto ``lanes`` narrow beats, with a
+per-bridge FIFO (``NoCConfig.bridge_fifo_depth``) and bandwidth model.  The
+cut is *semantically transparent* ("seamless" per the paper): outputs and all
+pre-existing NoCStats fields — waves, rounds, link/payload/flit bytes, the
+static cross-pod counters — are bit-identical to the unpartitioned execution
+in every mode.  Only the new ``bridge_*`` counters (beats, serialized wire
+bytes, stall rounds, peak FIFO occupancy — `interchip.BridgeStats`) record
+what the serial links did:
+
+* ``sim``   — `interchip.simulate_bridged_program` physically serializes
+  every crossing buffer into wire words and back, round by round;
+* ``spmd``  — `interchip.run_bridged_program` over
+  `partition.mesh_for_partition` (a 2D ``(pod, node)`` device mesh when the
+  plan's pods are equal contiguous blocks): intra-pod hops stay single
+  ``lax.ppermute`` rounds, cut hops run serdes encode → ``lanes`` serialized
+  beat ppermutes → decode; bridge counters come from the analytic
+  `interchip.bridge_program_stats`, which matches the simulator exactly;
+* ``sim_python`` — the seed loop routes unbridged but rolls in the same
+  analytic bridge counters, staying field-for-field comparable.
+
 The same compiled infrastructure also carries the LM-scale workload:
 `models.moe` with ``impl="noc"`` routes expert-parallel token packets through
 ``routing.compile_routes`` / ``run_route_program`` (linearized over the
@@ -100,14 +126,34 @@ class NoCStats:
     cross_pod_msgs: int = 0
     cross_pod_wire_bytes: int = 0
     cross_pod_beats: int = 0
+    # bridge counters (core.interchip) — nonzero only under partitioned
+    # execution (plan=); everything above is identical with or without a cut
+    bridge_beats: int = 0          # serial-lane cycles on the cut links
+    bridge_wire_bytes: int = 0     # serialized bytes incl. word/lane padding
+    bridge_stall_rounds: int = 0   # back-pressure + drain rounds at bridges
+    bridge_peak_fifo: int = 0      # max bridge FIFO occupancy (wire words)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
 
     def add(self, other: "NoCStats") -> "NoCStats":
         for f in dataclasses.fields(NoCStats):
-            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+            a, b = getattr(self, f.name), getattr(other, f.name)
+            # peak occupancy is a high-water mark, not a flow — merge by max
+            setattr(self, f.name,
+                    max(a, b) if f.name == "bridge_peak_fifo" else a + b)
         return self
+
+    def bridge_counters(self) -> dict:
+        return {k: v for k, v in self.as_dict().items()
+                if k.startswith("bridge_")}
+
+    def _roll_bridge(self, b) -> None:
+        """Fold one wave's BridgeStats in (peak merged by max)."""
+        self.bridge_beats += b.beats
+        self.bridge_wire_bytes += b.wire_bytes
+        self.bridge_stall_rounds += b.stall_rounds
+        self.bridge_peak_fifo = max(self.bridge_peak_fifo, b.peak_fifo)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,6 +168,7 @@ class NoCConfig:
 
     flit_data_width: int = 16          # bits
     flit_buffer_depth: int = 8         # per-(src, expert) FIFO depth, in slots
+    bridge_fifo_depth: int = 64        # inter-chip bridge FIFO, in wire words
     serdes: qserdes.QuasiSerdesConfig = dataclasses.field(
         default_factory=qserdes.QuasiSerdesConfig)
 
@@ -137,6 +184,13 @@ class NoCConfig:
         # (floor), never 0 for sub-byte widths
         per = max(1, self.flit_data_width // 8)
         return -(-nbytes // per)
+
+    def flit_framed_bytes(self, nbytes: int) -> int:
+        """THE flit-framing rule: payload bytes → on-link/FIFO bytes (whole
+        flits × ceiling flit storage).  Every framing call site — wave
+        compilation, the seed loop, wrapper-overhead accounting — goes
+        through here so the ceiling-division arithmetic lives in one place."""
+        return self.flits_for(nbytes) * self.flit_wire_bytes
 
 
 def wrapper_overhead(graph: TaskGraph, cfg: Optional[NoCConfig] = None) -> list[dict]:
@@ -154,7 +208,7 @@ def wrapper_overhead(graph: TaskGraph, cfg: Optional[NoCConfig] = None) -> list[
         out_b = sum(p.nbytes for p in pe.outputs)
         raw = in_b + out_b
         fifo = cfg.flit_buffer_depth * cfg.flit_wire_bytes * (len(pe.inputs) + len(pe.outputs))
-        flit_b = sum(cfg.flits_for(p.nbytes) * cfg.flit_wire_bytes
+        flit_b = sum(cfg.flit_framed_bytes(p.nbytes)
                      for p in list(pe.inputs) + list(pe.outputs))
         rows.append(dict(pe=pe.name, wo_wrapper_bytes=raw, fifo_bytes=fifo,
                          flit_bytes=flit_b, with_wrapper_bytes=flit_b + fifo,
@@ -231,10 +285,29 @@ class NoCExecutor:
         self._vmap_fns: dict[int, Any] = {}
         self._vmap_ok: dict[int, bool] = {}
         # spmd lowering (mode="spmd") is built lazily on first use: it needs
-        # n_nodes real/fake devices, which sim-only runs must not require
+        # n_nodes real/fake devices, which sim-only runs must not require.
+        # The bridged program (plan=) is likewise compiled on first partitioned
+        # run — it needs no devices, only the route program + the cut.
         self._route_prog = None
+        self._bridge_prog = None
         self._spmd_mesh = None
         self._spmd_fn = None
+
+    def _ensure_bridge(self):
+        """Compile the partitioned (bridged) program once per executor."""
+        if self.plan is None:
+            return None
+        if self._bridge_prog is None:
+            from .interchip import BridgeConfig, compile_bridges
+            from .routing import compile_routes
+
+            if self._route_prog is None:
+                self._route_prog = compile_routes(self.topo)
+            self._bridge_prog = compile_bridges(
+                self._route_prog, self.plan,
+                BridgeConfig(serdes=self.plan.serdes_cfg,
+                             fifo_depth=self.cfg.bridge_fifo_depth))
+        return self._bridge_prog
 
     # -- compile -------------------------------------------------------------
     def _compile_wave(self, wave: list[str]) -> _WaveProgram:
@@ -253,7 +326,7 @@ class NoCExecutor:
                 nbytes = port.nbytes
                 s, d = self.placement[c.src_pe], self.placement[c.dst_pe]
                 off = pair_off.get((s, d), 0)
-                pair_off[(s, d)] = off + cfg.flits_for(nbytes) * flit_w  # flit padding
+                pair_off[(s, d)] = off + cfg.flit_framed_bytes(nbytes)  # flit padding
                 slots.append(_MsgSlot(c.src_pe, c.src_port, c.dst_pe, c.dst_port,
                                       tuple(port.shape), np.dtype(port.dtype),
                                       nbytes, seg, seg + nbytes))
@@ -314,42 +387,64 @@ class NoCExecutor:
     # -- spmd lowering -------------------------------------------------------
     def _ensure_spmd(self) -> None:
         """Compile the topology schedule to a ppermute-round program and jit
-        the shard_map transport over the NoC device mesh (once per executor)."""
+        the shard_map transport over the NoC device mesh (once per executor).
+
+        With a partition plan, the transport is the *bridged* program over
+        `partition.mesh_for_partition` — a ``(pod, node)`` mesh when the
+        plan's pods are equal contiguous blocks — where intra-pod hops stay
+        ppermute rounds and cut hops run through quasi-SERDES endpoints
+        (`interchip.run_bridged_program`)."""
         if self._spmd_fn is not None:
             return
         from jax.sharding import PartitionSpec as P
 
         from ..compat import shard_map
-        from .partition import mesh_for_topology
+        from .partition import mesh_for_partition, mesh_for_topology
         from .routing import compile_routes, run_route_program
 
-        prog = self._route_prog = compile_routes(self.topo)
-        mesh = self._spmd_mesh = mesh_for_topology(self.topo)
-        n_lead = len(prog.axes)
-        names = tuple(a for a, _ in prog.axes)
+        if self._route_prog is None:
+            self._route_prog = compile_routes(self.topo)
+        prog = self._route_prog
+        bprog = self._ensure_bridge()
+        if bprog is not None:
+            from .interchip import run_bridged_program
 
-        def device_fn(local):
-            # local view: (1,)*n_lead + (n_dst, *payload) → route → same shape
-            x = local.reshape(local.shape[n_lead:])
-            return run_route_program(x, prog).reshape(local.shape)
+            mesh = self._spmd_mesh = mesh_for_partition(self.topo, self.plan)
+            names = mesh.axis_names
+            n_lead = len(names)
+
+            def device_fn(local):
+                x = local.reshape(local.shape[n_lead:])
+                return run_bridged_program(x, bprog, names).reshape(local.shape)
+        else:
+            mesh = self._spmd_mesh = mesh_for_topology(self.topo)
+            names = tuple(a for a, _ in prog.axes)
+            n_lead = len(names)
+
+            def device_fn(local):
+                # local view: (1,)*n_lead + (n_dst, *payload) → route → same
+                x = local.reshape(local.shape[n_lead:])
+                return run_route_program(x, prog).reshape(local.shape)
 
         sm = shard_map(device_fn, mesh=mesh, in_specs=P(*names),
                        out_specs=P(*names), check_vma=False)
         self._spmd_fn = jax.jit(sm)
 
-    def _route_spmd(self, msgs_arr: np.ndarray,
-                    B: Optional[int]) -> tuple[np.ndarray, ScheduleStats]:
+    def _route_spmd(self, msgs_arr: np.ndarray, B: Optional[int]):
         """Move one wave's message cube through the device mesh.
 
         msgs_arr: (n, n, buf) or (B, n, n, buf).  Same (delivered, stats)
         contract as :func:`simulate_schedule` — the batch rides along as
-        payload bytes, so rounds are physical while link_bytes scale with B."""
+        payload bytes, so rounds are physical while link_bytes scale with B.
+        Returns ``(delivered, ScheduleStats, BridgeStats | None)``; the
+        bridge stats are analytic (`interchip.bridge_program_stats`), which
+        the simulator matches exactly."""
         from .routing import route_program_stats
 
         self._ensure_spmd()
         prog = self._route_prog
         n = self.topo.n_nodes
-        sizes = tuple(s for _, s in prog.axes)
+        sizes = tuple(self._spmd_mesh.devices.shape)
         if B is None:
             payload = msgs_arr.shape[2:]
             cube = msgs_arr.reshape(sizes + (n,) + payload)
@@ -358,8 +453,13 @@ class NoCExecutor:
             cube = np.moveaxis(msgs_arr, 0, 2).reshape(sizes + (n,) + payload)
         out = np.asarray(self._spmd_fn(cube)).reshape((n, n) + payload)
         delivered = out if B is None else np.moveaxis(out, 2, 0)
-        return np.ascontiguousarray(delivered), route_program_stats(
-            prog, msgs_arr.nbytes)
+        bstats = None
+        if self._bridge_prog is not None:
+            from .interchip import bridge_program_stats
+
+            bstats = bridge_program_stats(self._bridge_prog, msgs_arr.nbytes)
+        return (np.ascontiguousarray(delivered),
+                route_program_stats(prog, msgs_arr.nbytes), bstats)
 
     # -- packing -------------------------------------------------------------
     @staticmethod
@@ -454,8 +554,16 @@ class NoCExecutor:
             msgs_arr = np.zeros(lead + (n * n * prog.buf_bytes,), np.uint8)
             msgs_arr[..., prog.pack_idx] = payload
             cube = msgs_arr.reshape(lead + (n, n, prog.buf_bytes))
+            bstats = None
             if spmd:
-                delivered, sstats = self._route_spmd(cube, B)
+                delivered, sstats, bstats = self._route_spmd(cube, B)
+            elif self.plan is not None:
+                # partitioned execution: same schedule, but pod-crossing hops
+                # physically serialize through the bridge endpoints
+                from .interchip import simulate_bridged_program
+
+                delivered, sstats, bstats = simulate_bridged_program(
+                    self._ensure_bridge(), cube, batched=B is not None)
             else:
                 delivered, sstats = simulate_schedule(topo, cube,
                                                       batched=B is not None)
@@ -471,6 +579,8 @@ class NoCExecutor:
                         getattr(stats, f.name) + scale * getattr(prog.static, f.name))
             stats.rounds += sstats.rounds
             stats.link_bytes += sstats.link_bytes
+            if bstats is not None:
+                stats._roll_bridge(bstats)
         outs = {f"{pe}.{port.name}": mailbox[(pe, port.name)] for pe, port in g.graph_outputs()}
         return outs, stats
 
@@ -519,9 +629,8 @@ class NoCExecutor:
                     stats.cross_pod_wire_bytes += qserdes.link_bytes_on_wire(
                         val.shape, val.dtype, cfg.serdes)
                     stats.cross_pod_beats += cfg.serdes.lanes
-            flit_w = cfg.flit_wire_bytes
             buf_bytes = max(
-                (sum(cfg.flits_for(v.nbytes) * flit_w for v, _, _ in msgs)
+                (sum(cfg.flit_framed_bytes(v.nbytes) for v, _, _ in msgs)
                  for msgs in per_pair.values()), default=0)
             if buf_bytes:
                 msgs_arr = np.zeros((n, n, buf_bytes), np.uint8)
@@ -530,16 +639,23 @@ class NoCExecutor:
                     for v, _, _ in msgs:
                         raw = v.tobytes()
                         msgs_arr[s, d, off:off + len(raw)] = np.frombuffer(raw, np.uint8)
-                        off += cfg.flits_for(v.nbytes) * flit_w  # flit padding
+                        off += cfg.flit_framed_bytes(v.nbytes)  # flit padding
                 delivered, sstats = simulate_schedule(topo, msgs_arr)
                 stats.rounds += sstats.rounds
                 stats.link_bytes += sstats.link_bytes
+                if pod_of is not None:
+                    # seed-loop bridge accounting: the analytic stats are
+                    # exact (== the bridged simulator), so the baseline stays
+                    # field-for-field comparable with the compiled engine
+                    from .interchip import bridge_program_stats
+                    stats._roll_bridge(bridge_program_stats(
+                        self._ensure_bridge(), msgs_arr.nbytes))
                 for (s, d), msgs in per_pair.items():
                     off = 0
                     for v, dpe, dport in msgs:
                         raw = delivered[d, s, off:off + v.nbytes].tobytes()
                         mailbox[(dpe, dport)] = np.frombuffer(raw, v.dtype).reshape(v.shape).copy()
-                        off += cfg.flits_for(v.nbytes) * flit_w
+                        off += cfg.flit_framed_bytes(v.nbytes)
         outs = {f"{pe}.{port.name}": mailbox[(pe, port.name)] for pe, port in g.graph_outputs()}
         return outs, stats
 

@@ -27,7 +27,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import serdes as qserdes
 from .graph import Channel, TaskGraph
-from .topology import Topology
+from .topology import Mesh2D, Topology
 
 
 # ---------------------------------------------------------------------------
@@ -83,12 +83,46 @@ def place_greedy(graph: TaskGraph, topo: Topology) -> dict[str, int]:
     return placement
 
 
-def placement_cost(graph: TaskGraph, topo: Topology, placement: Mapping[str, int]) -> int:
-    """Σ traffic_bytes × hops — the objective the greedy placer reduces."""
-    return sum(
-        b * topo.hops(placement[a], placement[c])
-        for (a, c), b in graph.traffic_bytes().items()
-    )
+def pair_cut_weights(graph: TaskGraph,
+                     serdes_cfg: qserdes.QuasiSerdesConfig) -> dict[tuple[str, str], int]:
+    """Per (src_pe, dst_pe) pair: the serialized wire beats its channels
+    occupy when the pair lands across the pod cut (`serdes.link_wire_beats` —
+    padded words incl. scale words, == lanes × per-lane words)."""
+    out: dict[tuple[str, str], int] = {}
+    for c in graph.channels:
+        p = graph.pes[c.src_pe].out_port(c.src_port)
+        w = qserdes.link_wire_beats(p.shape, p.dtype, serdes_cfg)
+        k = (c.src_pe, c.dst_pe)
+        out[k] = out.get(k, 0) + w
+    return out
+
+
+def placement_cost(graph: TaskGraph, topo: Topology, placement: Mapping[str, int],
+                   pod_of_node: Optional[Sequence[int]] = None,
+                   serdes_cfg: Optional[qserdes.QuasiSerdesConfig] = None,
+                   w_cut: float = 1.0) -> float:
+    """The placement objective, shared by the greedy placer, the annealer and
+    the pod-cut co-optimizer (one objective, no disagreement):
+
+    * intra-pod edges (and all edges when no cut is given) cost
+      ``traffic_bytes × hops`` — on-chip link traffic;
+    * pod-crossing edges cost ``w_cut ×`` their **serialized wire beats**
+      (`pair_cut_weights`) — serdes-aware: a cut edge pays for the padded
+      words its messages occupy on the narrow link (compression and lane
+      padding included), not its raw byte count.
+    """
+    traffic = graph.traffic_bytes()
+    if pod_of_node is None:
+        return sum(b * topo.hops(placement[a], placement[c])
+                   for (a, c), b in traffic.items())
+    beats = pair_cut_weights(graph, serdes_cfg or qserdes.QuasiSerdesConfig())
+    cost = 0.0
+    for (a, c), b in traffic.items():
+        if pod_of_node[placement[a]] == pod_of_node[placement[c]]:
+            cost += b * topo.hops(placement[a], placement[c])
+        else:
+            cost += w_cut * beats[(a, c)]
+    return cost
 
 
 def optimize_placement(graph: TaskGraph, topo: Topology,
@@ -96,13 +130,17 @@ def optimize_placement(graph: TaskGraph, topo: Topology,
                        init: Optional[Mapping[str, int]] = None,
                        iters: int = 2000, seed: int = 0,
                        w_cut: float = 1.0,
-                       max_per_node: Optional[int] = None) -> dict[str, int]:
+                       max_per_node: Optional[int] = None,
+                       serdes_cfg: Optional[qserdes.QuasiSerdesConfig] = None,
+                       ) -> dict[str, int]:
     """Annealing/KL-style placement search (the paper places by hand; this is
     the automated analog).
 
-    Minimizes ``placement_cost`` (Σ traffic × hops) plus — when a node→pod
-    assignment is given — ``w_cut`` × the bytes that would cross the pod cut
-    (each cross-pod byte pays for a quasi-SERDES traversal).  Moves are single
+    Minimizes :func:`placement_cost`: Σ traffic × hops for on-chip edges,
+    plus — when a node→pod assignment is given — ``w_cut`` × the serialized
+    wire beats of every edge crossing the pod cut (serdes-aware, so the
+    annealer and the pod-cut co-optimizer share one objective; each cut edge
+    pays for the quasi-SERDES frame its messages occupy).  Moves are single
     PE relocations and PE↔PE swaps; acceptance is simulated annealing with a
     geometric cooling schedule, deterministic under ``seed``.  Incremental
     delta evaluation touches only the moved PEs' channels, so a step is O(deg)
@@ -138,29 +176,27 @@ def optimize_placement(graph: TaskGraph, topo: Topology,
     if max(occ.values(), default=0) > max_per_node:
         raise ValueError(f"initial placement exceeds max_per_node={max_per_node}: "
                          f"occupancy {occ}")
-    # symmetric traffic adjacency: pe -> [(other_pe, bytes)]
-    adj: dict[str, list[tuple[str, int]]] = {p: [] for p in names}
+    # symmetric traffic adjacency: pe -> [(other_pe, bytes, cut wire beats)]
+    beats = pair_cut_weights(graph, serdes_cfg or qserdes.QuasiSerdesConfig())
+    adj: dict[str, list[tuple[str, int, int]]] = {p: [] for p in names}
     for (a, b), by in graph.traffic_bytes().items():
         if a != b:
-            adj[a].append((b, by))
-            adj[b].append((a, by))
+            adj[a].append((b, by, beats[(a, b)]))
+            adj[b].append((a, by, beats[(a, b)]))
 
     def local(pe: str, node: int) -> float:
         c = 0.0
-        for other, by in adj[pe]:
+        for other, by, cw in adj[pe]:
             o = node if other == pe else placement[other]
-            c += by * topo.hops(node, o)
             if pod_of_node is not None and pod_of_node[node] != pod_of_node[o]:
-                c += w_cut * by
+                c += w_cut * cw
+            else:
+                c += by * topo.hops(node, o)
         return c
 
     def total() -> float:
-        c = float(placement_cost(graph, topo, placement))
-        if pod_of_node is not None:
-            for (a, b), by in graph.traffic_bytes().items():
-                if pod_of_node[placement[a]] != pod_of_node[placement[b]]:
-                    c += w_cut * by
-        return c
+        return float(placement_cost(graph, topo, placement, pod_of_node,
+                                    serdes_cfg, w_cut))
 
     cost = total()
     best_cost, best = cost, dict(placement)
@@ -205,12 +241,16 @@ def optimize_placement(graph: TaskGraph, topo: Topology,
 
 def resolve_placement(graph: TaskGraph, topo: Topology, spec="rr",
                       pod_of_node: Optional[Sequence[int]] = None,
-                      seed: int = 0) -> dict[str, int]:
+                      seed: int = 0,
+                      serdes_cfg: Optional[qserdes.QuasiSerdesConfig] = None,
+                      ) -> dict[str, int]:
     """Turn a placement spec into a PE→node map.
 
     ``spec`` is one of ``"rr"`` (round-robin), ``"greedy"``, ``"opt"``
-    (annealing search, see :func:`optimize_placement`) or an explicit
-    mapping, which is passed through."""
+    (annealing search, see :func:`optimize_placement` — cut-aware when
+    ``pod_of_node`` is given, weighting cut edges by ``serdes_cfg``'s
+    serialized wire beats so the search optimizes the objective the executor
+    actually pays) or an explicit mapping, which is passed through."""
     if isinstance(spec, Mapping):
         missing = set(graph.pes) - set(spec)
         if missing:
@@ -225,7 +265,8 @@ def resolve_placement(graph: TaskGraph, topo: Topology, spec="rr",
     if spec == "greedy":
         return place_greedy(graph, topo)
     if spec == "opt":
-        return optimize_placement(graph, topo, pod_of_node=pod_of_node, seed=seed)
+        return optimize_placement(graph, topo, pod_of_node=pod_of_node, seed=seed,
+                                  serdes_cfg=serdes_cfg)
     raise ValueError(f"unknown placement spec {spec!r}; use 'rr'|'greedy'|'opt' or a mapping")
 
 
@@ -253,6 +294,34 @@ def mesh_for_topology(topo: Topology, devices: Optional[Sequence] = None) -> Mes
             f"XLA_FLAGS=--xla_force_host_platform_device_count={need}")
     return Mesh(np.array(devices[:need]).reshape(shape),
                 tuple(a for a, _ in axes))
+
+
+def mesh_for_partition(topo: Topology, plan: "PartitionPlan",
+                       devices: Optional[Sequence] = None) -> Mesh:
+    """Device mesh for *partitioned* spmd execution (`core.interchip`).
+
+    When the plan's pods are equal-sized contiguous node blocks, the mesh is
+    2D ``(pod, node)`` — pod p owns devices ``[p*k, (p+1)*k)`` and the flat
+    linearized device index over ``("pod", "node")`` is exactly the global
+    NoC node id the bridged program's hop pairs use.  For irregular cuts the
+    topology mesh is returned instead (pod membership then lives only in the
+    bridge tables; the execution is identical because the bridged program is
+    always linearized over the flat index)."""
+    n = topo.n_nodes
+    pods = tuple(plan.pod_of_node)
+    n_pods = max(pods) + 1 if pods else 1
+    blocked = (n_pods > 1 and n % n_pods == 0
+               and all(pods[i] == i // (n // n_pods) for i in range(n)))
+    if not blocked:
+        return mesh_for_topology(topo, devices)
+    devices = list(jax.devices()) if devices is None else list(devices)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"topology {topo.name!r} needs {n} devices for partitioned SPMD "
+            f"execution, have {len(devices)}; run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+    return Mesh(np.array(devices[:n]).reshape(n_pods, n // n_pods),
+                ("pod", "node"))
 
 
 def node_device_coords(topo: Topology, node: int) -> dict[str, int]:
@@ -296,16 +365,23 @@ class PartitionPlan:
     def cut_bytes(self, graph: TaskGraph) -> int:
         return sum(graph.pes[c.src_pe].out_port(c.src_port).nbytes for c in self.cross)
 
-    def wire_bytes(self, graph: TaskGraph) -> int:
-        """Bytes on the narrow inter-pod wire after serdes framing/compression."""
+    def wire_beats(self, graph: TaskGraph) -> int:
+        """Serialized wire beats (padded words incl. scale words) the cut
+        channels occupy per wave — the serdes-aware cut cost the placement
+        objective charges (`placement_cost` / `optimize_pod_cut`)."""
         return sum(
-            qserdes.link_bytes_on_wire(
+            qserdes.link_wire_beats(
                 graph.pes[c.src_pe].out_port(c.src_port).shape,
                 graph.pes[c.src_pe].out_port(c.src_port).dtype,
                 self.serdes_cfg,
             )
             for c in self.cross
         )
+
+    def wire_bytes(self, graph: TaskGraph) -> int:
+        """Bytes on the narrow inter-pod wire after serdes framing/compression
+        (= ``wire_beats × beat_bytes`` — one framing rule, one call site)."""
+        return self.wire_beats(graph) * self.serdes_cfg.beat_bytes
 
 
 def cut(graph: TaskGraph, placement: Mapping[str, int], pod_of_node: Sequence[int],
@@ -315,6 +391,64 @@ def cut(graph: TaskGraph, placement: Mapping[str, int], pod_of_node: Sequence[in
         same = pod_of_node[placement[c.src_pe]] == pod_of_node[placement[c.dst_pe]]
         (intra if same else cross).append(c)
     return PartitionPlan(dict(placement), tuple(pod_of_node), tuple(intra), tuple(cross), serdes_cfg)
+
+
+def candidate_cuts(topo: Topology, n_pods: int) -> list[tuple[int, ...]]:
+    """Deterministic node→pod candidates for an ``n_pods``-way cut:
+
+    * linear blocks (rows of a 2D grid, arcs of a ring) — the physical
+      "consecutive routers per chip" split;
+    * column blocks for 2D topologies (cut along the other axis);
+    * strided round-robin — the adversarial control the optimizer should
+      beat on locality-sensitive graphs.
+    """
+    n = topo.n_nodes
+    cands: list[tuple[int, ...]] = []
+    if n % n_pods == 0:
+        blk = n // n_pods
+        cands.append(tuple(i // blk for i in range(n)))
+        if isinstance(topo, Mesh2D) and topo.rx % n_pods == 0:
+            w = topo.rx // n_pods
+            cands.append(tuple((i % topo.rx) // w for i in range(n)))
+        cands.append(tuple(i % n_pods for i in range(n)))
+    else:
+        cands.append(tuple(min(i * n_pods // n, n_pods - 1) for i in range(n)))
+    seen, out = set(), []
+    for c in cands:
+        if c not in seen:
+            seen.add(c)
+            out.append(c)
+    return out
+
+
+def optimize_pod_cut(graph: TaskGraph, topo: Topology, n_pods: int = 2,
+                     serdes_grid: Optional[Sequence[qserdes.QuasiSerdesConfig]] = None,
+                     iters: int = 800, seed: int = 0,
+                     w_cut: float = 1.0) -> tuple[PartitionPlan, float]:
+    """Co-optimize the pod cut with serdes compression settings (the ROADMAP
+    placement/pod-cut item): for every candidate node→pod cut
+    (:func:`candidate_cuts`) × serdes config in ``serdes_grid``, anneal the
+    placement under the shared serdes-aware objective
+    (:func:`placement_cost` = intra-pod link bytes + serialized cut beats)
+    and keep the winner.  Deterministic under ``seed``.
+
+    Returns ``(PartitionPlan, cost)`` — the plan carries the chosen
+    placement, pod assignment and serdes config, ready for
+    ``NoCExecutor(plan=...)``."""
+    if serdes_grid is None:
+        serdes_grid = [qserdes.QuasiSerdesConfig(wire_bits=wb, lanes=l, compress=cp)
+                       for wb in (8, 16, 32) for l in (1, 8)
+                       for cp in ("none", "bf16")]
+    best: Optional[tuple[float, dict, tuple, qserdes.QuasiSerdesConfig]] = None
+    for pods in candidate_cuts(topo, n_pods):
+        for scfg in serdes_grid:
+            pl = optimize_placement(graph, topo, pod_of_node=pods, iters=iters,
+                                    seed=seed, w_cut=w_cut, serdes_cfg=scfg)
+            c = float(placement_cost(graph, topo, pl, pods, scfg, w_cut))
+            if best is None or c < best[0]:
+                best = (c, pl, pods, scfg)
+    cost, pl, pods, scfg = best
+    return cut(graph, pl, pods, scfg), cost
 
 
 # ---------------------------------------------------------------------------

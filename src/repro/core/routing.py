@@ -214,7 +214,7 @@ def compile_routes(topo: Topology) -> RouteProgram:
 def _line_exchange_compiled(x: jax.Array, phase: LinePhase,
                             axis_name: Optional[str] = None,
                             coord: Optional[jax.Array] = None,
-                            expand=None) -> jax.Array:
+                            expand=None, transfer=None) -> jax.Array:
     """Execute one compiled line phase on the per-device view (inside
     shard_map): x is (n, *chunk) destination-indexed, returns source-indexed.
 
@@ -222,7 +222,13 @@ def _line_exchange_compiled(x: jax.Array, phase: LinePhase,
     With ``axis_name``/``coord``/``expand`` it runs *linearized* over a single
     flat device axis that embeds the phase axis: ``coord`` is this device's
     position along the phase axis and ``expand`` maps the phase's per-axis
-    (src, dst) hop pairs to full-axis pairs (every row/column concurrently)."""
+    (src, dst) hop pairs to full-axis pairs (every row/column concurrently).
+
+    ``transfer(buf, pairs)`` overrides the hop transport (default: one
+    ``lax.ppermute``).  `core.interchip` uses it to funnel pod-crossing hops
+    through quasi-SERDES bridge endpoints while intra-pod hops stay plain
+    ppermutes; the pairs it receives are the *expanded* (full-axis) ones, i.e.
+    global node ids in linearized mode."""
     sched = phase.sched
     name = axis_name or sched.axis
     i = lax.axis_index(name) if coord is None else coord
@@ -232,7 +238,10 @@ def _line_exchange_compiled(x: jax.Array, phase: LinePhase,
     for rnd in phase.rounds:
         for mv in rnd.moves:
             perm = expand(mv.perm) if expand is not None else list(mv.perm)
-            bufs[mv.buf] = lax.ppermute(bufs[mv.buf], name, perm)
+            if transfer is None:
+                bufs[mv.buf] = lax.ppermute(bufs[mv.buf], name, perm)
+            else:
+                bufs[mv.buf] = transfer(bufs[mv.buf], perm)
             src = jnp.asarray(mv.src_table, jnp.int32)[i]
             val = lax.dynamic_index_in_dim(bufs[mv.buf], i, 0, keepdims=False)
             out = _put(out, src, val, src >= 0)
@@ -240,7 +249,8 @@ def _line_exchange_compiled(x: jax.Array, phase: LinePhase,
 
 
 def run_route_program(x: jax.Array, prog: RouteProgram,
-                      axis_name: Optional[str] = None) -> jax.Array:
+                      axis_name: Optional[str] = None,
+                      transfer=None) -> jax.Array:
     """Execute a compiled RouteProgram inside ``shard_map``.
 
     Same contract as the handwritten schedules: ``x`` is the per-device
@@ -255,12 +265,25 @@ def run_route_program(x: jax.Array, prog: RouteProgram,
     full axis so every row/column exchanges concurrently, exactly one
     ``lax.ppermute`` per hop move.  This is how callers embedded in an
     existing mesh (e.g. MoE token dispatch over the ``model`` axis) route
-    through the topology without building a dedicated NoC mesh."""
+    through the topology without building a dedicated NoC mesh.
+
+    ``transfer`` (see :func:`_line_exchange_compiled`) swaps the hop transport
+    and requires ``axis_name`` (linearized execution) so its pairs are global
+    node ids."""
+    if transfer is not None and axis_name is None:
+        raise ValueError("transfer= requires linearized execution (axis_name)")
     if prog.fused:
+        if transfer is not None:
+            # a fused crossbar has no hop moves to re-transport; silently
+            # ignoring the hook would execute cut links un-bridged
+            raise ValueError("transfer= is not supported for fused programs; "
+                             "use interchip.run_bridged_program, which "
+                             "handles the crossbar case itself")
         name = axis_name or prog.axes[0][0]
         return lax.all_to_all(x, name, split_axis=0, concat_axis=0)
     if len(prog.phases) == 1:
-        return _line_exchange_compiled(x, prog.phases[0], axis_name=axis_name)
+        return _line_exchange_compiled(x, prog.phases[0], axis_name=axis_name,
+                                       transfer=transfer)
     # 2D XY routing: factorized exchange, same data motion as grid_all_to_all
     (_, ry), (_, rx) = prog.axes          # axes = (noc_y, noc_x)
     phase_x, phase_y = prog.phases        # phases ordered X then Y
@@ -276,9 +299,11 @@ def run_route_program(x: jax.Array, prog: RouteProgram,
     c = x.shape[1:]
     b = x.reshape(ry, rx, *c)             # (dy, dx, *c)
     b = jnp.moveaxis(b, 1, 0)             # (dx, dy, *c)
-    b = _line_exchange_compiled(b, phase_x, axis_name, cx, ex_x)   # (sx, dy, *c)
+    b = _line_exchange_compiled(b, phase_x, axis_name, cx, ex_x,
+                                transfer)                          # (sx, dy, *c)
     b = jnp.moveaxis(b, 1, 0)             # (dy, sx, *c)
-    b = _line_exchange_compiled(b, phase_y, axis_name, cy, ex_y)   # (sy, sx, *c)
+    b = _line_exchange_compiled(b, phase_y, axis_name, cy, ex_y,
+                                transfer)                          # (sy, sx, *c)
     return b.reshape(ry * rx, *c)         # source linear index sy*rx + sx
 
 

@@ -47,6 +47,13 @@ class QuasiSerdesConfig:
         assert self.compress in ("none", "bf16", "int8")
         assert self.lanes >= 1
 
+    @property
+    def beat_bytes(self) -> int:
+        """Storage bytes of ONE wire word (a single-lane beat) — the same
+        ceiling-division framing rule as ``NoCConfig.flit_wire_bytes``.  All
+        word↔byte arithmetic in this module goes through here."""
+        return -(-self.wire_bits // 8)
+
 
 @dataclasses.dataclass
 class LinkMeta:
@@ -73,7 +80,7 @@ def _pad_to(x: jax.Array, multiple: int) -> jax.Array:
 def plan(shape: tuple[int, ...], dtype, cfg: QuasiSerdesConfig) -> LinkMeta:
     """Compute the static framing plan for a message contract."""
     n = int(math.prod(shape)) if shape else 1
-    wire_bytes = cfg.wire_bits // 8
+    wire_bytes = cfg.beat_bytes
     if cfg.compress == "none":
         payload = n * jnp.dtype(dtype).itemsize
         scale_words = 0
@@ -186,10 +193,19 @@ def send_over_link(x: jax.Array, axis_name: str, perm: list[tuple[int, int]],
     return decode(rwords, rscales, cfg, meta), new_res
 
 
+def link_wire_beats(shape, dtype, cfg: QuasiSerdesConfig) -> int:
+    """Serialized wire beats (padded words incl. scale words) one message of
+    this contract occupies on a cut link — ``lanes`` × per-lane words.  The
+    serdes-aware cut weight used by ``partition.placement_cost`` and the
+    pod-cut co-optimizer, so the annealer and the co-optimizer share one
+    objective."""
+    meta = plan(tuple(shape), dtype, cfg)
+    return meta.n_words + meta.n_scale_words
+
+
 def link_bytes_on_wire(shape, dtype, cfg: QuasiSerdesConfig) -> int:
     """Bytes that actually cross the narrow link (roofline collective term)."""
-    meta = plan(tuple(shape), dtype, cfg)
-    return (meta.n_words + meta.n_scale_words) * (cfg.wire_bits // 8)
+    return link_wire_beats(shape, dtype, cfg) * cfg.beat_bytes
 
 
 def compression_ratio(shape, dtype, cfg: QuasiSerdesConfig) -> float:

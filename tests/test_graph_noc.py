@@ -140,3 +140,33 @@ def test_wrapper_overhead_non_byte_multiple_flit_width():
     tiny = NoCConfig(flit_data_width=4, flit_buffer_depth=2)
     assert tiny.flit_wire_bytes == 1
     assert tiny.flits_for(5) == 5
+
+
+def test_flit_framing_single_source():
+    """Regression (framing unification): `NoCConfig.flit_framed_bytes` is THE
+    ceiling-division framing rule — wrapper_overhead, the compiled wave
+    layout and the seed loop all agree with it, for byte-multiple and odd
+    flit widths alike."""
+    g, inp = _diamond_graph()
+    for width in (8, 12, 16, 24):
+        cfg = NoCConfig(flit_data_width=width)
+        for nbytes in (1, 5, 7, 16, 33):
+            assert cfg.flit_framed_bytes(nbytes) == \
+                cfg.flits_for(nbytes) * cfg.flit_wire_bytes
+            assert cfg.flit_framed_bytes(nbytes) >= nbytes
+        rows = wrapper_overhead(g, cfg)
+        for r in rows:
+            assert r["flit_bytes"] % cfg.flit_wire_bytes == 0
+        # the engine's wave layout uses the same rule: per-pair buffer sizes
+        # are sums of framed message sizes (16 B float32 messages here)
+        ex = NoCExecutor(g, make_topology("mesh", 4), cfg=cfg)
+        framed = cfg.flit_framed_bytes(16)
+        for prog in ex.programs:
+            if prog.slots:
+                assert prog.buf_bytes % framed == 0
+        # and the engine still matches the seed loop bit for bit + stats
+        out_s, st_s = ex.run(inp, mode="sim")
+        out_l, st_l = ex.run(inp, mode="sim_python")
+        for k in out_s:
+            assert np.array_equal(np.asarray(out_s[k]), np.asarray(out_l[k]))
+        assert st_s.as_dict() == st_l.as_dict()

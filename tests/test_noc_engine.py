@@ -147,7 +147,9 @@ def test_golden_stats_ldpc_fano():
     _, _, st = ldpc.decode_on_noc(ldpc.fano_plane_H(), llr, 10)
     assert st.as_dict() == dict(
         waves=20, rounds=60, link_bytes=92160, payload_bytes=840, flits=420,
-        cross_pod_msgs=0, cross_pod_wire_bytes=0, cross_pod_beats=0)
+        cross_pod_msgs=0, cross_pod_wire_bytes=0, cross_pod_beats=0,
+        bridge_beats=0, bridge_wire_bytes=0, bridge_stall_rounds=0,
+        bridge_peak_fifo=0)
 
 
 def test_golden_stats_bmvm():
@@ -162,7 +164,9 @@ def test_golden_stats_bmvm():
     assert np.array_equal(out.reshape(1, -1), bmvm.software_ref(A, v[None], 2))
     assert st.as_dict() == dict(
         waves=4, rounds=8, link_bytes=5632, payload_bytes=256, flits=128,
-        cross_pod_msgs=0, cross_pod_wire_bytes=0, cross_pod_beats=0)
+        cross_pod_msgs=0, cross_pod_wire_bytes=0, cross_pod_beats=0,
+        bridge_beats=0, bridge_wire_bytes=0, bridge_stall_rounds=0,
+        bridge_peak_fifo=0)
 
 
 @pytest.mark.slow
@@ -178,7 +182,9 @@ llr = ldpc.awgn_llr(np.zeros(7, np.int8), 3.0, rng)
 _, _, st = ldpc.decode_on_noc(ldpc.fano_plane_H(), llr, 10, mode="spmd")
 assert st.as_dict() == dict(
     waves=20, rounds=60, link_bytes=92160, payload_bytes=840, flits=420,
-    cross_pod_msgs=0, cross_pod_wire_bytes=0, cross_pod_beats=0), st.as_dict()
+    cross_pod_msgs=0, cross_pod_wire_bytes=0, cross_pod_beats=0,
+        bridge_beats=0, bridge_wire_bytes=0, bridge_stall_rounds=0,
+        bridge_peak_fifo=0), st.as_dict()
 
 rng = np.random.default_rng(0)
 cfg = bmvm.BMVMConfig(n=64, k=8, fold=2)
@@ -190,7 +196,9 @@ out, st = bmvm.iterate_noc_sim(jnp.asarray(lut), v, cfg, 2, topology="mesh",
 assert np.array_equal(out.reshape(1, -1), bmvm.software_ref(A, v[None], 2))
 assert st.as_dict() == dict(
     waves=4, rounds=8, link_bytes=5632, payload_bytes=256, flits=128,
-    cross_pod_msgs=0, cross_pod_wire_bytes=0, cross_pod_beats=0), st.as_dict()
+    cross_pod_msgs=0, cross_pod_wire_bytes=0, cross_pod_beats=0,
+        bridge_beats=0, bridge_wire_bytes=0, bridge_stall_rounds=0,
+        bridge_peak_fifo=0), st.as_dict()
 print("OK")
 """, n_devices=16)
 

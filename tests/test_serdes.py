@@ -71,3 +71,87 @@ def test_wire_accounting():
     cfg = QuasiSerdesConfig(wire_bits=16, lanes=8, compress="none")
     b = link_bytes_on_wire((100,), jnp.float32, cfg)
     assert b >= 400 and b % (8 * 2) == 0              # padded to lanes×wire
+
+
+# ---------------------------------------------------------------------------
+# edge cases: every wire_bits × lanes corner, odd payloads, meta agreement,
+# multi-step error feedback on a *drifting* signal
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from([8, 16, 32]), st.sampled_from([1, 8]),
+       st.sampled_from(["float32", "int32", "uint8", "int16"]),
+       st.integers(1, 67))
+@settings(max_examples=60, deadline=None)
+def test_linkmeta_roundtrip_all_widths(wire_bits, lanes, dtype, n):
+    """LinkMeta round trip across the full wire_bits × lanes grid and mixed
+    dtypes, odd payload sizes included: both endpoints derive the same static
+    plan, the frame pads to whole lanes, and decode is the exact inverse."""
+    cfg = QuasiSerdesConfig(wire_bits=wire_bits, lanes=lanes, compress="none")
+    rng = np.random.default_rng(n * wire_bits + lanes)
+    if dtype.startswith("float"):
+        x = jnp.asarray(rng.normal(size=(n,)), dtype)
+    else:
+        info = np.iinfo(dtype)
+        x = jnp.asarray(rng.integers(info.min, info.max, size=(n,)), dtype)
+    meta_tx = S.plan(x.shape, x.dtype, cfg)
+    meta_rx = S.plan(x.shape, x.dtype, cfg)           # far endpoint, a priori
+    assert meta_tx == meta_rx
+    assert meta_tx.n_words % lanes == 0               # lanes-aligned padding
+    assert meta_tx.n_words * cfg.beat_bytes >= x.nbytes
+    w, sw, _ = S.encode(x, cfg, meta_tx)
+    assert w.shape == (lanes, meta_tx.n_words // lanes)
+    y = S.decode(w, sw, cfg, meta_rx)
+    assert y.dtype == x.dtype
+    assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+@given(st.sampled_from([8, 16, 32]), st.sampled_from([1, 8]))
+@settings(max_examples=12, deadline=None)
+def test_odd_payload_padding_is_zero(wire_bits, lanes):
+    """Padding bytes beyond the payload are zeros on the wire — deterministic
+    frames (nothing leaks from adjacent memory) for odd-sized messages."""
+    cfg = QuasiSerdesConfig(wire_bits=wire_bits, lanes=lanes, compress="none")
+    x = jnp.asarray(np.full(5, 0xAB, np.uint8))       # 5 bytes, never aligned
+    meta = S.plan(x.shape, x.dtype, cfg)
+    w, _, _ = S.encode(x, cfg, meta)
+    raw = np.asarray(w).view(np.uint8).reshape(-1)[:meta.n_words * cfg.beat_bytes]
+    assert np.all(raw[:5] == 0xAB)
+    assert np.all(raw[5:] == 0)
+
+
+def test_int8_error_feedback_bounded_on_drifting_signal():
+    """Error feedback over a multi-step loop with a *changing* signal: the
+    residual stays bounded by one quantization step of the running signal
+    (no accumulation), and the summed transmission tracks the summed truth."""
+    cfg = QuasiSerdesConfig(compress="int8", block=32)
+    rng = np.random.default_rng(1)
+    meta = S.plan((64,), jnp.float32, cfg)
+    res = None
+    sent_sum = np.zeros(64)
+    true_sum = np.zeros(64)
+    max_abs = 0.0
+    for step in range(80):
+        g = jnp.asarray(rng.normal(size=(64,)) * (1 + 0.1 * step), jnp.float32)
+        max_abs = max(max_abs, float(jnp.abs(g).max()))
+        w, sw, res = S.encode(g, cfg, meta, residual=res)
+        sent_sum += np.asarray(S.decode(w, sw, cfg, meta))
+        true_sum += np.asarray(g)
+        # boundedness every step, not just at the end
+        assert np.abs(np.asarray(res)).max() <= max_abs / 127 * 2 + 1e-5, step
+    assert np.abs(sent_sum - true_sum).max() <= max_abs / 127 * 3 + 1e-5
+
+
+@given(st.sampled_from([1, 8]), st.integers(1, 50))
+@settings(max_examples=20, deadline=None)
+def test_int8_odd_sizes_roundtrip_bound(lanes, n):
+    """int8 path with payloads that don't fill a block or a lane: scale words
+    ride along and the error bound still holds."""
+    cfg = QuasiSerdesConfig(wire_bits=16, lanes=lanes, compress="int8", block=16)
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.normal(size=(n,)) * 2, jnp.float32)
+    meta = S.plan(x.shape, x.dtype, cfg)
+    assert meta.n_scale_words % lanes == 0
+    w, sw, _ = S.encode(x, cfg, meta)
+    y = S.decode(w, sw, cfg, meta)
+    bound = float(jnp.abs(x).max()) / 127 + 1e-6
+    assert np.abs(np.asarray(x) - np.asarray(y)).max() <= bound
