@@ -34,6 +34,13 @@ Tables:
                      trade-off), with sim/spmd/analytic parity gates and the
                      serdes-aware pod-cut co-optimizer; re-execs under
                      XLA_FLAGS when single-device.
+  table9_congestion— buffered wormhole switching under load: injection rate ×
+                     buffer_depth → latency/throughput saturation curves for
+                     uniform / hotspot / transpose / bursty traffic on the
+                     16-node mesh (cycle simulator vs the analytic
+                     lower-bound/saturation model, with drain + exactly-once
+                     + bound gates), plus a torus depth-1 deadlock-freedom
+                     gate and an executor-level buffered-vs-sim parity row.
   placement_search — annealing optimize_placement vs round-robin/greedy:
                      Σ traffic×hops cost (and cross-pod cut bytes) for the
                      LDPC / BMVM / particle-filter graphs.
@@ -480,6 +487,89 @@ def table8_interchip(fast: bool) -> list[str]:
     return rows
 
 
+def table9_congestion(fast: bool) -> list[str]:
+    """Buffered wormhole switching saturation curves (mode="buffered" stack).
+
+    Sweeps offered load (as a fraction of the analytic saturation rate) ×
+    input-FIFO depth for the four traffic patterns on the 16-node mesh.
+    Gates (CI goes red on regression):
+      * drain + exactly-once: every offered packet is delivered, at every
+        depth including the depth=1 worst case;
+      * sim/analytic agreement: cycles >= `switch_lower_bound` and accepted
+        throughput <= `saturation_rate`, for every cell of the sweep;
+      * deadlock freedom on wrapped topologies: a torus depth=1 hotspot mix
+        (the adversarial configuration for wormhole deadlock) must drain;
+      * executor parity: `mode="buffered"` delivers LDPC payloads identical
+        to `mode="sim"`.
+    Latency is reported in cycles (avg and max); throughput in
+    flits/cycle/node against the saturation rate."""
+    from repro.core.switch import (SwitchConfig, saturation_rate,
+                                   simulate_switch, switch_lower_bound)
+    from repro.core.topology import make_topology
+    from repro.core.traffic import (TrafficConfig, generate_traffic,
+                                    traffic_matrix)
+
+    topo = make_topology("mesh", 16)
+    n_pk = 16 if fast else 48
+    depths = (1, 4) if fast else (1, 2, 4, 8)
+    load_fracs = (0.3, 1.5) if fast else (0.2, 0.5, 0.8, 1.2, 2.0)
+    rows = []
+    for pattern in ("uniform", "hotspot", "transpose", "bursty"):
+        tm = traffic_matrix(topo, TrafficConfig(pattern=pattern, hotspot=5))
+        sat = saturation_rate(topo, tm)
+        for depth in depths:
+            for frac in load_fracs:
+                tcfg = TrafficConfig(pattern=pattern, hotspot=5,
+                                     injection_rate=frac * sat,
+                                     n_packets=n_pk, seed=0)
+                pkts = generate_traffic(topo, tcfg)
+                t0 = time.monotonic()
+                res = simulate_switch(topo, pkts,
+                                      SwitchConfig(buffer_depth=depth))
+                dt = (time.monotonic() - t0) * 1e6
+                st = res.stats
+                # gates: drain/exactly-once + analytic agreement
+                assert st.packets == len(pkts), (pattern, depth, frac)
+                assert st.cycles >= switch_lower_bound(topo, pkts), \
+                    (pattern, depth, frac)
+                thr = st.throughput(topo.n_nodes)
+                assert thr <= sat + 1e-9, (pattern, depth, frac)
+                rows.append(
+                    f"table9_{pattern}_d{depth}_l{frac},{dt:.0f},"
+                    f"offered={frac * sat:.3f} accepted={thr:.3f} "
+                    f"sat_rate={sat:.3f} cycles={st.cycles} "
+                    f"avg_lat={st.avg_latency:.1f} max_lat={st.latency_max} "
+                    f"stalls={st.stall_cycles} arb_losses={st.arb_losses} "
+                    f"max_queue={st.max_queue}")
+    # deadlock-freedom gate: torus at depth=1 under a hotspot mix is the
+    # adversarial wormhole configuration; dateline VCs must keep it live
+    torus = make_topology("torus", 16)
+    pkts = generate_traffic(torus, TrafficConfig(
+        pattern="hotspot", hotspot=5, hotspot_frac=0.7,
+        injection_rate=0.8, n_packets=n_pk, seed=7))
+    res = simulate_switch(torus, pkts, SwitchConfig(buffer_depth=1))
+    assert res.stats.packets == len(pkts), "torus depth-1 failed to drain"
+    rows.append(f"table9_torus_depth1_gate,0,packets={res.stats.packets} "
+                f"cycles={res.stats.cycles} deadlock_free=True")
+    # executor parity gate: buffered == sim on a real app
+    from repro.apps import ldpc
+
+    rng = np.random.default_rng(0)
+    llr = ldpc.awgn_llr(np.zeros(7, np.int8), 3.0, rng)
+    b_s, i_s, st_s = ldpc.decode_on_noc(ldpc.fano_plane_H(), llr, 10)
+    t0 = time.monotonic()
+    b_b, i_b, st_b = ldpc.decode_on_noc(ldpc.fano_plane_H(), llr, 10,
+                                        mode="buffered")
+    dt = (time.monotonic() - t0) * 1e6
+    assert np.array_equal(b_s, b_b) and np.array_equal(i_s, i_b)
+    assert st_b.payload_bytes == st_s.payload_bytes
+    rows.append(f"table9_ldpc_buffered,{dt:.0f},"
+                f"cycles={st_b.switch_cycles} sim_rounds={st_s.rounds} "
+                f"stalls={st_b.switch_stall_cycles} "
+                f"arb_losses={st_b.switch_arb_losses} outputs_identical=True")
+    return rows
+
+
 def placement_search(fast: bool) -> list[str]:
     """Annealing placement search vs round-robin/greedy on the app graphs."""
     from repro.apps import bmvm, ldpc
@@ -590,6 +680,7 @@ TABLES = {
     "table6_spmd": table6_spmd,
     "table7_moe_noc": table7_moe_noc,
     "table8_interchip": table8_interchip,
+    "table9_congestion": table9_congestion,
     "placement_search": placement_search,
     "fig_ldpc": fig_ldpc,
     "fig_pf": fig_pf,
@@ -597,18 +688,68 @@ TABLES = {
 }
 
 
+# tables with committed perf-trajectory snapshots (--snapshot): future PRs
+# diff BENCH_<key>.json against a fresh run to track the numbers over time
+SNAPSHOTS = {
+    "table4_bmvm_iter": "BENCH_table4.json",
+    "table9_congestion": "BENCH_table9.json",
+}
+
+
+def _parse_row(row: str) -> dict:
+    """One 'name,us,k=v k=v ...' CSV row -> a JSON-able dict."""
+    name, us, derived = row.split(",", 2)
+    parsed: dict = {"name": name, "us": float(us)}
+    for tok in derived.split():
+        if "=" not in tok:
+            continue
+        k, v = tok.split("=", 1)
+        try:
+            parsed[k] = int(v)
+        except ValueError:
+            try:
+                parsed[k] = float(v)
+            except ValueError:
+                parsed[k] = v
+    return parsed
+
+
+def _write_snapshot(table: str, rows: list[str], fast: bool) -> str:
+    """Persist a table's rows as benchmarks/BENCH_<key>.json.
+
+    Timings (`us` and any *_us key) are environment noise, so the snapshot
+    separates them from the derived counters a future PR can diff exactly."""
+    import json
+    import os
+
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        SNAPSHOTS[table])
+    payload = {"table": table, "fast": fast,
+               "rows": [_parse_row(r) for r in rows]}
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    return path
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--snapshot", action="store_true",
+                    help="write benchmarks/BENCH_<table>.json for tables "
+                         "with a tracked perf trajectory")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for name, fn in TABLES.items():
         if args.only and args.only != name:
             continue
         t0 = time.monotonic()
-        for row in fn(args.fast):
+        rows = fn(args.fast)
+        for row in rows:
             print(row)
+        if args.snapshot and name in SNAPSHOTS:
+            print(f"# snapshot: {_write_snapshot(name, rows, args.fast)}")
         print(f"# {name} done in {time.monotonic() - t0:.1f}s", flush=True)
 
 

@@ -6,6 +6,8 @@ routing    — topology schedules as shard_map collectives + numpy simulator
 serdes     — quasi-SERDES cut-link endpoints (framing + compression)
 partition  — phase-2 placement, pod cutting, sharding rules, cross-pod sync
 interchip  — bridge subsystem: compiled route programs across pod cuts
+switch     — buffered wormhole switching: FIFOs, arbitration, backpressure
+traffic    — synthetic traffic patterns (uniform/hotspot/transpose/bursty)
 noc        — the executor + flit accounting (Tables I–V analogs)
 """
 from .graph import PE, Channel, GraphError, Port, TaskGraph
@@ -26,6 +28,12 @@ from .routing import (RouteProgram, all_to_all_for, compile_routes,
                       simulate_schedule, topology_axes, transpose_oracle)
 from .serdes import (LinkMeta, QuasiSerdesConfig, compression_ratio, decode, encode,
                      link_bytes_on_wire, link_wire_beats, plan, send_over_link)
+from .switch import (DeadlockError, Packet, SwitchConfig, SwitchResult,
+                     SwitchStats, dor_route, link_loads, saturation_rate,
+                     simulate_switch, simulate_wormhole_cube,
+                     switch_lower_bound)
+from .traffic import (TrafficConfig, generate_traffic, traffic_matrix,
+                      transpose_partner)
 from .topology import (AxisSchedule, FatTree, Mesh2D, Ring, Topology, Torus2D,
                        bwd_pairs, compare, fwd_pairs, make_topology)
 

@@ -29,10 +29,24 @@ Execution modes — the three contracts
 * ``sim_python`` — the original per-message reference loop (dict framing +
   ``tobytes``/``frombuffer`` per message).  Kept as the behavioral baseline
   the engine is benchmarked and property-tested against.
+* ``buffered``   — the **contention-aware wormhole transport** (`core.switch`):
+  each wave's message cube moves flit-by-flit through per-port input FIFOs
+  (``NoCConfig.switch_buffer_depth``) with X-Y dimension-ordered routing,
+  round-robin output arbitration, credit backpressure, and dateline virtual
+  channels (``switch_vcs``).  Bit-identical to ``sim``: outputs, ``waves``,
+  ``payload_bytes``, ``flits``, and the ``cross_pod_*`` counters.
+  Mode-specific: ``rounds`` counts switch *cycles* (contention included, so
+  ≥ the contention-free schedule rounds), ``link_bytes`` counts flit-hops ×
+  flit wire bytes under dimension-ordered routes, and the ``switch_*``
+  counters (stalls, arbitration losses, peak queue/link occupancy) are
+  populated.  With ``plan=`` it routes uncut but rolls the analytic bridge
+  counters, like ``sim_python``.
 
 The contract between the modes: ``direct`` defines values, ``sim`` defines
 values + flit/round accounting, ``spmd`` must reproduce both bit-for-bit while
-actually moving bytes between devices.
+actually moving bytes between devices, and ``buffered`` must reproduce the
+values and static counters while exposing the congestion the lock-step modes
+cannot express.
 
 Partitioned execution (``plan=``) — the inter-chip contract
 -----------------------------------------------------------
@@ -132,6 +146,12 @@ class NoCStats:
     bridge_wire_bytes: int = 0     # serialized bytes incl. word/lane padding
     bridge_stall_rounds: int = 0   # back-pressure + drain rounds at bridges
     bridge_peak_fifo: int = 0      # max bridge FIFO occupancy (wire words)
+    # buffered-switch counters (core.switch) — nonzero only in mode="buffered"
+    switch_cycles: int = 0         # wormhole cycles across all waves
+    switch_stall_cycles: int = 0   # head flits blocked on credit/VC allocation
+    switch_arb_losses: int = 0     # eligible flits that lost an arbitration
+    switch_max_queue: int = 0      # peak input-FIFO occupancy, flits
+    switch_peak_link_flits: int = 0  # peak flits on links in one cycle
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -139,9 +159,9 @@ class NoCStats:
     def add(self, other: "NoCStats") -> "NoCStats":
         for f in dataclasses.fields(NoCStats):
             a, b = getattr(self, f.name), getattr(other, f.name)
-            # peak occupancy is a high-water mark, not a flow — merge by max
+            # peak occupancies are high-water marks, not flows — merge by max
             setattr(self, f.name,
-                    max(a, b) if f.name == "bridge_peak_fifo" else a + b)
+                    max(a, b) if f.name in _MAX_MERGE_FIELDS else a + b)
         return self
 
     def bridge_counters(self) -> dict:
@@ -154,6 +174,20 @@ class NoCStats:
         self.bridge_wire_bytes += b.wire_bytes
         self.bridge_stall_rounds += b.stall_rounds
         self.bridge_peak_fifo = max(self.bridge_peak_fifo, b.peak_fifo)
+
+    def _roll_switch(self, sw) -> None:
+        """Fold one wave's SwitchStats in (peaks merged by max)."""
+        self.switch_cycles += sw.cycles
+        self.switch_stall_cycles += sw.stall_cycles
+        self.switch_arb_losses += sw.arb_losses
+        self.switch_max_queue = max(self.switch_max_queue, sw.max_queue)
+        self.switch_peak_link_flits = max(self.switch_peak_link_flits,
+                                          sw.peak_link_flits)
+
+
+# high-water-mark fields: NoCStats.add merges these by max, not sum
+_MAX_MERGE_FIELDS = frozenset(
+    {"bridge_peak_fifo", "switch_max_queue", "switch_peak_link_flits"})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -169,6 +203,8 @@ class NoCConfig:
     flit_data_width: int = 16          # bits
     flit_buffer_depth: int = 8         # per-(src, expert) FIFO depth, in slots
     bridge_fifo_depth: int = 64        # inter-chip bridge FIFO, in wire words
+    switch_buffer_depth: int = 4       # buffered mode: input FIFO depth, flits
+    switch_vcs: int = 2                # buffered mode: VCs per input port
     serdes: qserdes.QuasiSerdesConfig = dataclasses.field(
         default_factory=qserdes.QuasiSerdesConfig)
 
@@ -245,6 +281,7 @@ class _WaveProgram:
     pack_idx: np.ndarray   # flat indices into (n, n, buf_bytes) per payload byte
     gather_idx: np.ndarray # flat indices into delivered (n_dst, n_src, buf_bytes)
     static: NoCStats       # value-independent stats increment for this wave
+    pairs: tuple[tuple[int, int, int], ...]  # occupied (src, dst, framed_bytes)
 
 
 class NoCExecutor:
@@ -346,7 +383,10 @@ class NoCExecutor:
             pack.append((s * n + d) * buf_bytes + span)
             gather.append((d * n + s) * buf_bytes + span)   # delivered is (dst, src)
         cat = lambda xs: (np.concatenate(xs) if xs else np.zeros(0, np.int64))
-        return _WaveProgram(tuple(slots), seg, buf_bytes, cat(pack), cat(gather), static)
+        return _WaveProgram(tuple(slots), seg, buf_bytes, cat(pack), cat(gather),
+                            static,
+                            tuple((s, d, nb) for (s, d), nb
+                                  in sorted(pair_off.items())))
 
     # -- firing --------------------------------------------------------------
     # jit/vmap caches are keyed by the fn object, not the PE name: graphs that
@@ -479,14 +519,14 @@ class NoCExecutor:
             return self.graph.run(inputs), NoCStats()
         if mode == "sim_python":
             return self._run_sim_python(inputs)
-        if mode not in ("sim", "spmd"):
+        if mode not in ("sim", "spmd", "buffered"):
             raise GraphError(f"unknown mode {mode!r}; use "
-                             f"'direct'|'sim'|'spmd'|'sim_python'")
+                             f"'direct'|'sim'|'spmd'|'buffered'|'sim_python'")
         mailbox: dict[tuple[str, str], Any] = {}
         for k, v in inputs.items():
             pe, port = k.split(".")
             mailbox[(pe, port)] = np.asarray(v)
-        return self._run_compiled(mailbox, B=None, spmd=mode == "spmd")
+        return self._run_compiled(mailbox, B=None, transport=mode)
 
     def run_batch(self, inputs: Mapping[str, Any],
                   mode: str = "sim") -> tuple[dict[str, Any], NoCStats]:
@@ -507,8 +547,9 @@ class NoCExecutor:
                      for b in range(B)]
             outs = {k: np.stack([np.asarray(it[k]) for it in items]) for k in items[0]}
             return outs, NoCStats()
-        if mode not in ("sim", "spmd"):
-            raise GraphError(f"unknown mode {mode!r}; use 'direct'|'sim'|'spmd'")
+        if mode not in ("sim", "spmd", "buffered"):
+            raise GraphError(f"unknown mode {mode!r}; use "
+                             f"'direct'|'sim'|'spmd'|'buffered'")
         mailbox: dict[tuple[str, str], Any] = {}
         for k, v in inputs.items():
             pe, port = k.split(".")
@@ -516,25 +557,34 @@ class NoCExecutor:
             if arr.shape[0] != B:
                 raise GraphError(f"input {k} batch axis {arr.shape[0]} != {B}")
             mailbox[(pe, port)] = arr
-        return self._run_compiled(mailbox, B=B, spmd=mode == "spmd")
+        return self._run_compiled(mailbox, B=B, transport=mode)
+
+    def _switch_cfg(self):
+        """NoCConfig knobs → the buffered transport's SwitchConfig."""
+        from .switch import SwitchConfig
+
+        return SwitchConfig(buffer_depth=self.cfg.switch_buffer_depth,
+                            n_vcs=self.cfg.switch_vcs,
+                            flit_bytes=self.cfg.flit_wire_bytes)
 
     def _run_compiled(self, mailbox: dict[tuple[str, str], Any],
                       B: Optional[int],
-                      spmd: bool = False) -> tuple[dict[str, Any], NoCStats]:
+                      transport: str = "sim") -> tuple[dict[str, Any], NoCStats]:
         """Execute the compiled flit program; ``B=None`` single-set, else a
         leading batch axis rides through every pack/route/unpack step.
 
-        ``spmd`` swaps the transport: the same per-wave message cube moves
-        through the compiled ppermute schedule on the device mesh instead of
-        the numpy round-by-round simulator.  Everything else — firing,
-        framing, stats accumulation — is shared, which is what makes the two
-        modes bit-identical by construction."""
+        ``transport`` swaps how each wave's message cube moves: ``"sim"`` is
+        the round-by-round numpy schedule simulator, ``"spmd"`` the compiled
+        ppermute program on the device mesh, ``"buffered"`` the cycle-accurate
+        wormhole switch (`core.switch`).  Everything else — firing, framing,
+        stats accumulation — is shared, which is what makes the modes
+        bit-identical on values by construction."""
         g, topo = self.graph, self.topo
         n = topo.n_nodes
         lead = () if B is None else (B,)
         scale = 1 if B is None else B
         stats = NoCStats()
-        if spmd:
+        if transport == "spmd":
             self._ensure_spmd()     # fail fast if the mesh can't be built
         for wave, prog in zip(self.waves, self.programs):
             stats.waves += 1
@@ -555,8 +605,27 @@ class NoCExecutor:
             msgs_arr[..., prog.pack_idx] = payload
             cube = msgs_arr.reshape(lead + (n, n, prog.buf_bytes))
             bstats = None
-            if spmd:
+            if transport == "spmd":
                 delivered, sstats, bstats = self._route_spmd(cube, B)
+                rounds, link_bytes = sstats.rounds, sstats.link_bytes
+            elif transport == "buffered":
+                from .switch import simulate_wormhole_cube
+
+                delivered, swst = simulate_wormhole_cube(
+                    topo, cube, self._switch_cfg(), pairs=prog.pairs,
+                    batched=B is not None)
+                # mode-specific accounting: rounds are switch cycles (with
+                # contention), link_bytes are flit-hops on the wormhole routes
+                rounds = swst.cycles
+                link_bytes = swst.link_flits * self.cfg.flit_wire_bytes
+                stats._roll_switch(swst)
+                if self.plan is not None:
+                    # uncut routing + analytic bridge counters, the
+                    # sim_python precedent for non-bridged transports
+                    from .interchip import bridge_program_stats
+
+                    bstats = bridge_program_stats(self._ensure_bridge(),
+                                                  cube.nbytes)
             elif self.plan is not None:
                 # partitioned execution: same schedule, but pod-crossing hops
                 # physically serialize through the bridge endpoints
@@ -564,9 +633,11 @@ class NoCExecutor:
 
                 delivered, sstats, bstats = simulate_bridged_program(
                     self._ensure_bridge(), cube, batched=B is not None)
+                rounds, link_bytes = sstats.rounds, sstats.link_bytes
             else:
                 delivered, sstats = simulate_schedule(topo, cube,
                                                       batched=B is not None)
+                rounds, link_bytes = sstats.rounds, sstats.link_bytes
             recv = delivered.reshape(lead + (-1,))[..., prog.gather_idx]
             for slot in prog.slots:
                 seg = recv[..., slot.a:slot.b].copy()   # owns + aligns the bytes
@@ -577,8 +648,8 @@ class NoCExecutor:
             for f in dataclasses.fields(NoCStats):
                 setattr(stats, f.name,
                         getattr(stats, f.name) + scale * getattr(prog.static, f.name))
-            stats.rounds += sstats.rounds
-            stats.link_bytes += sstats.link_bytes
+            stats.rounds += rounds
+            stats.link_bytes += link_bytes
             if bstats is not None:
                 stats._roll_bridge(bstats)
         outs = {f"{pe}.{port.name}": mailbox[(pe, port.name)] for pe, port in g.graph_outputs()}

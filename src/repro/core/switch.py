@@ -1,0 +1,503 @@
+"""Buffered wormhole switching: cycle-accurate contention-aware NoC transport.
+
+Every other execution mode in this repo (``direct``, ``sim``, ``spmd``, the
+bridged variants) runs *contention-free* compiled schedules: all buffers move
+in lock-step rounds, so input buffering, arbitration and backpressure are
+inexpressible.  This module adds the congestion regime a real CONNECT-style
+fabric lives in — the SpikeHard ``Router.v`` / zamlet ``NetworkSwitch`` model:
+
+* **per-port input FIFOs** of configurable ``buffer_depth`` (flits), one per
+  virtual channel, with credit-based backpressure (a flit advances only when
+  the downstream FIFO has a free slot);
+* **X-Y dimension-ordered routing** over the existing `core.topology` meshes
+  and tori (unidirectional rotation on the ring, single-hop crossbar on the
+  fat-tree) — minimal, static, never revisits a node;
+* **round-robin arbitration** between the input (port, VC) slots competing for
+  an output port — one flit per physical output per cycle, rotating priority,
+  losers counted as ``arb_losses``;
+* **packet-atomic (wormhole) switching per virtual channel**: a downstream VC
+  FIFO is allocated to one packet from header to tail (``fifo`` owner), so a
+  packet's flits are never interleaved with another packet's inside a VC,
+  while the *physical* link is cycle-multiplexed between VCs (flit-level VC
+  flow control — this is what keeps the escape channel live);
+* **dateline virtual channels** on wrapped dimensions: packets start on VC 0
+  and switch to VC 1 when they cross a wraparound link, which breaks the ring
+  cyclic channel dependency — with ``n_vcs >= 2`` every supported topology's
+  channel dependency graph is acyclic, hence deadlock-free (property-tested in
+  tests/test_switch.py along with exactly-once delivery under saturation).
+
+Two agreeing interpreters:
+
+* :func:`simulate_switch` — the cycle simulator (numpy state tables, sparse
+  per-cycle iteration over occupied FIFOs).  Terminates for every workload:
+  each granted move strictly advances a flit along its static route, and a
+  zero-move fixed point with flits in flight is reported as
+  :class:`DeadlockError` instead of spinning.
+* :func:`switch_lower_bound` / :func:`saturation_rate` — the analytic model:
+  per-packet pipeline bound (``t_inject + hops + flits``), per-link and
+  per-ejection-port serialization bounds, and the channel-load saturation
+  rate.  The simulator can never beat the bound (property-tested) and matches
+  it exactly in the contention-free and single-bottleneck regimes.
+
+:func:`simulate_wormhole_cube` adapts the simulator to the executor's
+``(n, n, buf_bytes)`` message-cube contract (`NoCExecutor` ``mode="buffered"``):
+payload bytes physically ride the flits and ``delivered[d, s]`` is reassembled
+from the flit tokens ejected at ``d`` — bit-identical to ``simulate_schedule``
+delivery by the exactly-once property, not by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .topology import FatTree, Mesh2D, Ring, Topology, Torus2D
+
+EJECT = -2    # output-port key: consume the flit at the local node
+INJECT = -1   # input-port key: the node's (unbounded) injection queue
+
+
+class DeadlockError(RuntimeError):
+    """No flit can move, nothing left to inject: a cyclic resource wait."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SwitchConfig:
+    """CONNECT "Router Options" analog for the buffered mode.
+
+    ``buffer_depth``  — input FIFO depth per (port, VC), in flits (SpikeHard's
+                        ``BUFFER_DEPTH``); depth 1 is the legal worst case.
+    ``n_vcs``         — virtual channels per input port; >= 2 required for
+                        wrapped topologies (ring/torus datelines).
+    ``flit_bytes``    — bytes carried per flit (== NoCConfig.flit_wire_bytes).
+    ``max_cycles``    — optional hard horizon (DeadlockError past it); the
+                        fixed-point detector makes it redundant for finite
+                        workloads, it only guards mis-use.
+    """
+
+    buffer_depth: int = 4
+    n_vcs: int = 2
+    flit_bytes: int = 2
+    max_cycles: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Packet:
+    """One wormhole packet: ``n_flits`` flits injected at ``t_inject``.
+
+    ``payload`` (optional) is the uint8 byte vector the flits carry; flit
+    ``f`` carries bytes ``[f*flit_bytes, (f+1)*flit_bytes)`` (zero-padded)."""
+
+    src: int
+    dst: int
+    n_flits: int
+    t_inject: int = 0
+    payload: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
+class SwitchStats:
+    """Counters of one :func:`simulate_switch` run (NoCStats ``switch_*``)."""
+
+    cycles: int = 0            # cycles until the last tail flit ejected
+    packets: int = 0           # packets delivered (== offered, asserted)
+    flits: int = 0             # flits ejected
+    link_flits: int = 0        # flit-hops over router->router links
+    stall_cycles: int = 0      # head flits blocked on credit/VC allocation
+    arb_losses: int = 0        # eligible head flits that lost an arbitration
+    max_queue: int = 0         # peak input-FIFO occupancy, flits
+    peak_link_flits: int = 0   # peak flits crossing links in one cycle
+    latency_sum: int = 0
+    latency_max: int = 0
+
+    @property
+    def avg_latency(self) -> float:
+        return self.latency_sum / max(self.packets, 1)
+
+    def throughput(self, n_nodes: int) -> float:
+        """Accepted load over the whole run, flits/cycle/node."""
+        return self.flits / max(self.cycles, 1) / n_nodes
+
+
+@dataclasses.dataclass
+class SwitchResult:
+    stats: SwitchStats
+    completions: np.ndarray          # per-packet tail-eject cycle (exclusive)
+    payloads: list                   # per-packet delivered bytes (or None)
+    ejections: Optional[list] = None  # (cycle, packet_id) log when recorded
+
+
+# ---------------------------------------------------------------------------
+# X-Y dimension-ordered routing + dateline VC assignment
+# ---------------------------------------------------------------------------
+
+def dor_route(topo: Topology, src: int, dst: int,
+              n_vcs: int = 2) -> tuple[tuple[int, ...], tuple[int, ...]]:
+    """Dimension-ordered route and per-hop virtual channels.
+
+    Returns ``(route, vcs)``: ``route = (src, ..., dst)`` visits neighbors
+    only and never revisits a node; ``vcs[i]`` is the VC of the input FIFO the
+    packet occupies at ``route[i+1]`` (``len(vcs) == hops``).  VC 0 until the
+    path crosses a wraparound (dateline) link in the current dimension, VC 1
+    from that hop on; the VC resets to 0 when routing switches dimension
+    (X links and Y links are disjoint channel sets).  Requires ``n_vcs >= 2``
+    on wrapped topologies — with one VC the wrapped rings have a cyclic
+    channel dependency and wormhole can deadlock."""
+    if src == dst:
+        return (src,), ()
+    esc = min(1, n_vcs - 1)
+    if isinstance(topo, FatTree):
+        return (src, dst), (0,)
+    if isinstance(topo, Ring):
+        # paper-faithful CONNECT ring: unidirectional +1 rotation
+        n = topo.n_nodes
+        route, vcs, vc, cur = [src], [], 0, src
+        while cur != dst:
+            if cur == n - 1:          # the n-1 -> 0 hop crosses the dateline
+                vc = esc
+            cur = (cur + 1) % n
+            route.append(cur)
+            vcs.append(vc)
+        return tuple(route), tuple(vcs)
+    if isinstance(topo, Mesh2D):      # Torus2D is a subclass
+        wrap = isinstance(topo, Torus2D)
+        x, y = topo.coords(src)
+        dx, dy = topo.coords(dst)
+        route, vcs = [src], []
+        for size, cur, tgt, axis in ((topo.rx, x, dx, "x"), (topo.ry, y, dy, "y")):
+            vc = 0
+            while cur != tgt:
+                if wrap:
+                    fwd = (tgt - cur) % size
+                    step = 1 if fwd <= size - fwd else -1
+                    if (cur == size - 1 and step == 1) or (cur == 0 and step == -1):
+                        vc = esc      # this hop crosses the dimension dateline
+                    cur = (cur + step) % size
+                else:
+                    cur += 1 if tgt > cur else -1
+                if axis == "x":
+                    x = cur
+                else:
+                    y = cur
+                route.append(topo.node(x, y))
+                vcs.append(vc)
+        return tuple(route), tuple(vcs)
+    raise TypeError(f"no dimension-ordered routes for {type(topo).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# cycle simulator
+# ---------------------------------------------------------------------------
+
+def simulate_switch(topo: Topology, packets: Sequence[Packet],
+                    cfg: Optional[SwitchConfig] = None,
+                    record_ejections: bool = False) -> SwitchResult:
+    """Cycle-accurate wormhole simulation of ``packets`` over ``topo``.
+
+    Per cycle: every occupied input (port, VC) FIFO head requests its packet's
+    next output; per physical output one flit is granted (owner VCs and
+    credit-eligible headers compete, round-robin); grants are computed against
+    start-of-cycle state and applied atomically, so the result is independent
+    of router iteration order.  Raises :class:`DeadlockError` on a zero-move
+    fixed point with flits in flight (exact: the state transition is
+    deterministic, so one immobile cycle proves permanence)."""
+    cfg = cfg or SwitchConfig()
+    n = topo.n_nodes
+    depth = cfg.buffer_depth
+    fb = cfg.flit_bytes
+    if depth < 1:
+        raise ValueError("buffer_depth must be >= 1")
+    needs_vc = isinstance(topo, (Ring, Torus2D))
+    if needs_vc and cfg.n_vcs < 2:
+        raise ValueError(f"{topo.name} has wraparound links: n_vcs >= 2 "
+                         f"(dateline escape channels) required for deadlock "
+                         f"freedom, got {cfg.n_vcs}")
+
+    # -- static per-packet tables ------------------------------------------
+    P = len(packets)
+    nxt: list[dict[int, tuple[int, int]]] = []   # node -> (out_key, down_vc)
+    pay_src: list[Optional[np.ndarray]] = []
+    out_pay: list[Optional[np.ndarray]] = []
+    for p in packets:
+        if p.n_flits < 1:
+            raise ValueError(f"packet {p.src}->{p.dst}: n_flits must be >= 1")
+        route, vcs = dor_route(topo, p.src, p.dst, cfg.n_vcs)
+        hops = len(route) - 1
+        tab = {route[i]: (route[i + 1], vcs[i]) if i < hops else (EJECT, 0)
+               for i in range(hops + 1)}
+        nxt.append(tab)
+        if p.payload is not None:
+            buf = np.zeros(p.n_flits * fb, np.uint8)
+            raw = np.ascontiguousarray(p.payload).reshape(-1).view(np.uint8)
+            if raw.size > buf.size:
+                raise ValueError(f"payload {raw.size}B exceeds "
+                                 f"{p.n_flits} flits x {fb}B")
+            buf[:raw.size] = raw
+            pay_src.append(buf)
+            out_pay.append(np.zeros_like(buf))
+        else:
+            pay_src.append(None)
+            out_pay.append(None)
+
+    # -- dynamic state ------------------------------------------------------
+    # input FIFO key: (router, upstream_node | INJECT, vc)
+    fifos: dict[tuple[int, int, int], deque] = {}
+    owner: dict[tuple[int, int, int], Optional[int]] = {}
+    srcq: dict[int, deque] = {s: deque() for s in range(n)}
+    rr: dict[tuple[int, int], int] = {}
+    # arbitration ring per router: injection slot first, then (port, vc) slots
+    rings: list[list[tuple[int, int]]] = []
+    for u in range(n):
+        slots = [(INJECT, 0)]
+        for up in sorted(topo.neighbors(u)):
+            for vc in range(cfg.n_vcs):
+                slots.append((up, vc))
+        rings.append(slots)
+
+    order = sorted(range(P), key=lambda i: (packets[i].t_inject, i))
+    inj_ptr = 0
+    stats = SwitchStats()
+    completions = np.full(P, -1, np.int64)
+    ejected = np.zeros(P, np.int64)      # flits ejected so far, per packet
+    ej_log: Optional[list] = [] if record_ejections else None
+    c = 0
+    while stats.packets < P:
+        if cfg.max_cycles is not None and c > cfg.max_cycles:
+            raise DeadlockError(f"max_cycles={cfg.max_cycles} exceeded with "
+                                f"{P - stats.packets} packets in flight")
+        injected = False
+        while inj_ptr < P and packets[order[inj_ptr]].t_inject <= c:
+            pid = order[inj_ptr]
+            srcq[packets[pid].src].extend(
+                (pid, f) for f in range(packets[pid].n_flits))
+            inj_ptr += 1
+            injected = True
+        # ---- gather requests: head flit of every occupied input slot ------
+        reqs: dict[tuple[int, int], list] = {}
+        for u in range(n):
+            for si, (up, vc) in enumerate(rings[u]):
+                q = srcq[u] if up == INJECT else fifos.get((u, up, vc))
+                if not q:
+                    continue
+                pid, fidx = q[0]
+                okey, dvc = nxt[pid][u]
+                if okey == EJECT:
+                    elig = True
+                else:
+                    dkey = (okey, u, dvc)
+                    own = owner.get(dkey)
+                    df = fifos.get(dkey)
+                    room = (0 if df is None else len(df)) < depth
+                    # wormhole VC allocation: the downstream VC belongs to one
+                    # packet header-to-tail; headers claim a free VC, body
+                    # flits follow their claim — both need a credit
+                    elig = room and (own == pid or (own is None and fidx == 0))
+                reqs.setdefault((u, okey), []).append((si, up, vc, pid, fidx,
+                                                       dvc, elig))
+        # ---- arbitrate: one flit per physical output port per cycle -------
+        moves = []
+        for (u, okey), cands in sorted(reqs.items()):
+            elig = [cand for cand in cands if cand[6]]
+            stats.stall_cycles += len(cands) - len(elig)
+            if not elig:
+                continue
+            ptr = rr.get((u, okey), 0)
+            L = len(rings[u])
+            win = min(elig, key=lambda cand: (cand[0] - ptr) % L)
+            stats.arb_losses += len(elig) - 1
+            rr[(u, okey)] = (win[0] + 1) % L
+            moves.append((u, okey, win))
+        # ---- apply (grants were computed on start-of-cycle state) ---------
+        link_moves = 0
+        for u, okey, (si, up, vc, pid, fidx, dvc, _) in moves:
+            pkt = packets[pid]
+            tail = fidx == pkt.n_flits - 1
+            if up == INJECT:
+                srcq[u].popleft()
+            else:
+                fifos[(u, up, vc)].popleft()
+                if tail:
+                    owner[(u, up, vc)] = None
+            if okey == EJECT:
+                assert u == pkt.dst, (pid, u, pkt.dst)
+                # wormhole keeps a packet's flits in order on one path:
+                # in-order arrival here IS exactly-once delivery
+                assert fidx == ejected[pid], (pid, fidx, int(ejected[pid]))
+                ejected[pid] += 1
+                stats.flits += 1
+                if out_pay[pid] is not None:
+                    out_pay[pid][fidx * fb:(fidx + 1) * fb] = \
+                        pay_src[pid][fidx * fb:(fidx + 1) * fb]
+                if ej_log is not None:
+                    ej_log.append((c, pid))
+                if tail:
+                    stats.packets += 1
+                    lat = c + 1 - pkt.t_inject
+                    stats.latency_sum += lat
+                    stats.latency_max = max(stats.latency_max, lat)
+                    completions[pid] = c + 1
+            else:
+                dkey = (okey, u, dvc)
+                dq = fifos.setdefault(dkey, deque())
+                dq.append((pid, fidx))
+                if fidx == 0:
+                    owner[dkey] = pid
+                link_moves += 1
+                stats.link_flits += 1
+                stats.max_queue = max(stats.max_queue, len(dq))
+        stats.peak_link_flits = max(stats.peak_link_flits, link_moves)
+        if not moves and not injected:
+            if inj_ptr < P:   # idle gap: fast-forward to the next injection
+                c = packets[order[inj_ptr]].t_inject
+                continue
+            stuck = [(pid, packets[pid].src, packets[pid].dst)
+                     for pid in range(P) if completions[pid] < 0]
+            raise DeadlockError(
+                f"cycle {c}: no flit can move, {len(stuck)} packets wedged "
+                f"(first few: {stuck[:4]}) — cyclic buffer wait")
+        c += 1
+    stats.cycles = c
+    assert int(ejected.sum()) == sum(p.n_flits for p in packets)
+    return SwitchResult(stats, completions, out_pay, ej_log)
+
+
+# ---------------------------------------------------------------------------
+# analytic model: lower bound + saturation
+# ---------------------------------------------------------------------------
+
+def link_loads(topo: Topology, packets: Sequence[Packet],
+               n_vcs: int = 2) -> dict[tuple[int, int], int]:
+    """Flits crossing each directed link under dimension-ordered routing."""
+    loads: dict[tuple[int, int], int] = {}
+    for p in packets:
+        route, _ = dor_route(topo, p.src, p.dst, n_vcs)
+        for i in range(len(route) - 1):
+            key = (route[i], route[i + 1])
+            loads[key] = loads.get(key, 0) + p.n_flits
+    return loads
+
+
+def switch_lower_bound(topo: Topology, packets: Sequence[Packet],
+                       cfg: Optional[SwitchConfig] = None) -> int:
+    """Exact lower bound on :func:`simulate_switch` drain cycles.
+
+    max of three serialization arguments (each exact in its pure regime):
+
+    * pipeline:  a packet's tail ejects no earlier than
+      ``t_inject + hops + n_flits`` (one hop per cycle, one flit per cycle);
+    * ejection:  node ``d`` ejects one flit per cycle, and the first flit for
+      ``d`` cannot arrive before the minimum ``t_inject + hops`` over its
+      senders — ``cycles >= lead + sum(flits to d)``;
+    * link:      link ``(u, v)`` carries one flit per cycle; the first
+      crossing happens no earlier than ``min(t_inject + pos_u)`` and the last
+      crosser still needs ``min(hops - pos_u)`` cycles to eject.
+
+    A single uncontended packet meets the bound with equality (tested), as
+    does a single-bottleneck hotspot on the crossbar."""
+    cfg = cfg or SwitchConfig()
+    lb = 0
+    eject: dict[int, list[int]] = {}          # dst -> [load, min_lead]
+    links: dict[tuple[int, int], list[int]] = {}  # link -> [load, lead, trail]
+    for p in packets:
+        route, _ = dor_route(topo, p.src, p.dst, cfg.n_vcs)
+        hops = len(route) - 1
+        lb = max(lb, p.t_inject + hops + p.n_flits)
+        e = eject.setdefault(p.dst, [0, p.t_inject + hops])
+        e[0] += p.n_flits
+        e[1] = min(e[1], p.t_inject + hops)
+        for i in range(hops):
+            rec = links.setdefault((route[i], route[i + 1]),
+                                   [0, p.t_inject + i, hops - i])
+            rec[0] += p.n_flits
+            rec[1] = min(rec[1], p.t_inject + i)
+            rec[2] = min(rec[2], hops - i)
+    for load, lead in eject.values():
+        lb = max(lb, lead + load)
+    for load, lead, trail in links.values():
+        lb = max(lb, lead + load + trail)
+    return lb
+
+
+def saturation_rate(topo: Topology, matrix: np.ndarray,
+                    n_vcs: int = 2) -> float:
+    """Analytic saturation injection rate, flits/cycle/node.
+
+    ``matrix[s, d]`` is the fraction of node ``s``'s injected flits destined
+    to ``d`` (rows sum to 1).  At per-node offered rate ``r`` the load on a
+    channel is ``r * sum_{s,d} matrix[s,d] * [channel on route(s,d)]``; the
+    network saturates when the most-loaded channel (link or ejection port,
+    both 1 flit/cycle) reaches unity.  Measured accepted throughput can never
+    exceed the returned rate (benchmark/property gate)."""
+    n = topo.n_nodes
+    matrix = np.asarray(matrix, np.float64)
+    assert matrix.shape == (n, n)
+    load: dict = {}
+    for s in range(n):
+        for d in range(n):
+            w = float(matrix[s, d])
+            if w <= 0.0:
+                continue
+            route, _ = dor_route(topo, s, d, n_vcs)
+            for i in range(len(route) - 1):
+                key = (route[i], route[i + 1])
+                load[key] = load.get(key, 0.0) + w
+            ekey = (EJECT, d)
+            load[ekey] = load.get(ekey, 0.0) + w
+    return 1.0 / max(load.values())
+
+
+# ---------------------------------------------------------------------------
+# executor adapter: (n, n, buf_bytes) message-cube transport
+# ---------------------------------------------------------------------------
+
+def simulate_wormhole_cube(topo: Topology, msgs: np.ndarray,
+                           cfg: Optional[SwitchConfig] = None,
+                           pairs: Optional[Sequence[tuple[int, int, int]]] = None,
+                           batched: bool = False,
+                           ) -> tuple[np.ndarray, SwitchStats]:
+    """Move one ``(n, n, buf_bytes)`` message cube through the buffered
+    wormhole switch: same ``(delivered, stats)`` contract as
+    :func:`routing.simulate_schedule` (``delivered[d, s] == msgs[s, d]``).
+
+    ``pairs`` — optional ``(src, dst, nbytes)`` triples naming the occupied
+    buffers (the executor passes each wave's compiled pair layout); by default
+    every ``(s, d)`` buffer ships in full.  Each occupied buffer becomes ONE
+    wormhole packet of ``ceil(nbytes / flit_bytes)`` flits, injected at cycle
+    0 — a wave is a synchronized burst, the congested analog of one schedule
+    execution.  With ``batched=True`` msgs carries a leading batch axis and
+    the B message sets ride as payload inside the same packets (flit counts
+    scale with B, as in the batched schedule simulator).
+
+    Bytes physically ride the flits: delivery is reassembled from the ejected
+    flit tokens, so the bit-identity with ``mode="sim"`` rests on the
+    simulator's exactly-once property rather than on a transpose shortcut."""
+    cfg = cfg or SwitchConfig()
+    if batched:
+        assert msgs.ndim >= 3, "batched msgs must be (B, n_src, n_dst, *c)"
+        inner = np.ascontiguousarray(np.moveaxis(msgs, 0, 2))   # (n, n, B, buf)
+        delivered, stats = simulate_wormhole_cube(topo, inner, cfg, pairs=pairs)
+        return np.ascontiguousarray(np.moveaxis(delivered, 2, 0)), stats
+    n = topo.n_nodes
+    assert msgs.shape[0] == n and msgs.shape[1] == n
+    if pairs is None:
+        pairs = [(s, d, msgs.shape[-1]) for s in range(n) for d in range(n)]
+    packets, meta = [], []
+    for s, d, nb in pairs:
+        if nb <= 0:
+            continue
+        # cell is (..., buf) — (buf,) plain, (B, buf) via batched= recursion;
+        # nb counts live bytes along the trailing buffer axis
+        raw = np.ascontiguousarray(msgs[s, d][..., :nb]).reshape(-1)
+        raw = raw.view(np.uint8)
+        packets.append(Packet(s, d, max(1, -(-raw.size // cfg.flit_bytes)),
+                              t_inject=0, payload=raw))
+        meta.append((s, d, nb, raw.size))
+    res = simulate_switch(topo, packets, cfg)
+    delivered = np.zeros_like(msgs)
+    for pid, (s, d, nb, size) in enumerate(meta):
+        got = res.payloads[pid][:size]
+        cell = delivered[d, s]
+        cell[..., :nb] = got.reshape(cell.shape[:-1] + (nb,))
+    return delivered, res.stats

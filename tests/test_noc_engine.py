@@ -63,11 +63,20 @@ def _check_modes_match(topo_name, seed, n_nodes=6):
     direct = g.run(inp)
     sim, st_sim = ex.run(inp, mode="sim")
     legacy, st_leg = ex.run(inp, mode="sim_python")
+    buffered, st_buf = ex.run(inp, mode="buffered")
     for k in direct:
         assert np.array_equal(np.asarray(sim[k]), np.asarray(direct[k])), (topo_name, k)
         assert np.array_equal(np.asarray(legacy[k]), np.asarray(sim[k])), (topo_name, k)
+        assert np.array_equal(np.asarray(buffered[k]), np.asarray(sim[k])), (topo_name, k)
     # the engine's stats must equal the seed per-message loop's, field for field
     assert st_sim.as_dict() == st_leg.as_dict()
+    # buffered: static fields identical, transport fields mode-specific
+    for f in ("waves", "payload_bytes", "flits", "cross_pod_msgs",
+              "cross_pod_wire_bytes", "cross_pod_beats",
+              "bridge_beats", "bridge_wire_bytes"):
+        assert getattr(st_buf, f) == getattr(st_sim, f), (topo_name, f)
+    assert st_buf.switch_cycles == st_buf.rounds > 0
+    assert st_sim.switch_cycles == 0
     # batched: B stacked input sets == B direct runs, bit for bit
     B = 3
     binp = {"src.x": np.stack([np.arange(4.0) * (b + 1) for b in range(B)])}
@@ -149,7 +158,8 @@ def test_golden_stats_ldpc_fano():
         waves=20, rounds=60, link_bytes=92160, payload_bytes=840, flits=420,
         cross_pod_msgs=0, cross_pod_wire_bytes=0, cross_pod_beats=0,
         bridge_beats=0, bridge_wire_bytes=0, bridge_stall_rounds=0,
-        bridge_peak_fifo=0)
+        bridge_peak_fifo=0, switch_cycles=0, switch_stall_cycles=0,
+        switch_arb_losses=0, switch_max_queue=0, switch_peak_link_flits=0)
 
 
 def test_golden_stats_bmvm():
@@ -166,7 +176,70 @@ def test_golden_stats_bmvm():
         waves=4, rounds=8, link_bytes=5632, payload_bytes=256, flits=128,
         cross_pod_msgs=0, cross_pod_wire_bytes=0, cross_pod_beats=0,
         bridge_beats=0, bridge_wire_bytes=0, bridge_stall_rounds=0,
-        bridge_peak_fifo=0)
+        bridge_peak_fifo=0, switch_cycles=0, switch_stall_cycles=0,
+        switch_arb_losses=0, switch_max_queue=0, switch_peak_link_flits=0)
+
+
+def test_golden_stats_ldpc_fano_buffered():
+    """Buffered-mode accounting pinned: values stay sim-identical (the decode
+    trajectory, waves, payload, flits), while rounds become wormhole cycles
+    and the switch counters record the congestion the lock-step schedule
+    can't see."""
+    from repro.apps import ldpc
+
+    rng = np.random.default_rng(0)
+    llr = ldpc.awgn_llr(np.zeros(7, np.int8), 3.0, rng)
+    bits, _, st = ldpc.decode_on_noc(ldpc.fano_plane_H(), llr, 10,
+                                     mode="buffered")
+    assert not bits.any()
+    assert st.as_dict() == dict(
+        waves=20, rounds=190, link_bytes=2600, payload_bytes=840, flits=420,
+        cross_pod_msgs=0, cross_pod_wire_bytes=0, cross_pod_beats=0,
+        bridge_beats=0, bridge_wire_bytes=0, bridge_stall_rounds=0,
+        bridge_peak_fifo=0, switch_cycles=190, switch_stall_cycles=520,
+        switch_arb_losses=40, switch_max_queue=2, switch_peak_link_flits=13)
+
+
+def test_golden_stats_bmvm_buffered():
+    from repro.apps import bmvm
+
+    rng = np.random.default_rng(0)
+    cfg = bmvm.BMVMConfig(n=64, k=8, fold=2)
+    A = rng.integers(0, 2, (64, 64)).astype(np.uint8)
+    v = rng.integers(0, 2, (64,)).astype(np.uint8)
+    lut = bmvm.preprocess(A, cfg)
+    out, st = bmvm.iterate_noc_sim(jnp.asarray(lut), v, cfg, 2,
+                                   topology="mesh", mode="buffered")
+    assert np.array_equal(out.reshape(1, -1), bmvm.software_ref(A, v[None], 2))
+    assert st.as_dict() == dict(
+        waves=4, rounds=90, link_bytes=640, payload_bytes=256, flits=128,
+        cross_pod_msgs=0, cross_pod_wire_bytes=0, cross_pod_beats=0,
+        bridge_beats=0, bridge_wire_bytes=0, bridge_stall_rounds=0,
+        bridge_peak_fifo=0, switch_cycles=90, switch_stall_cycles=304,
+        switch_arb_losses=28, switch_max_queue=4, switch_peak_link_flits=6)
+
+
+def test_nocstats_add_mixed_semantics():
+    """NoCStats.add regression (the satellite bugfix): flow counters sum,
+    high-water marks (bridge_peak_fifo, switch_max_queue,
+    switch_peak_link_flits) merge by max — a sum there would fabricate
+    occupancy that never existed."""
+    from repro.core import NoCStats
+
+    a = NoCStats(rounds=10, switch_cycles=7, switch_stall_cycles=3,
+                 switch_arb_losses=2, switch_max_queue=5,
+                 switch_peak_link_flits=4, bridge_peak_fifo=9)
+    b = NoCStats(rounds=5, switch_cycles=8, switch_stall_cycles=1,
+                 switch_arb_losses=6, switch_max_queue=3,
+                 switch_peak_link_flits=11, bridge_peak_fifo=2)
+    a.add(b)
+    assert a.rounds == 15
+    assert a.switch_cycles == 15          # flow: sums
+    assert a.switch_stall_cycles == 4
+    assert a.switch_arb_losses == 8
+    assert a.switch_max_queue == 5        # high-water: max, not 8
+    assert a.switch_peak_link_flits == 11  # high-water: max, not 15
+    assert a.bridge_peak_fifo == 9
 
 
 @pytest.mark.slow
@@ -184,7 +257,9 @@ assert st.as_dict() == dict(
     waves=20, rounds=60, link_bytes=92160, payload_bytes=840, flits=420,
     cross_pod_msgs=0, cross_pod_wire_bytes=0, cross_pod_beats=0,
         bridge_beats=0, bridge_wire_bytes=0, bridge_stall_rounds=0,
-        bridge_peak_fifo=0), st.as_dict()
+        bridge_peak_fifo=0, switch_cycles=0, switch_stall_cycles=0,
+        switch_arb_losses=0, switch_max_queue=0,
+        switch_peak_link_flits=0), st.as_dict()
 
 rng = np.random.default_rng(0)
 cfg = bmvm.BMVMConfig(n=64, k=8, fold=2)
@@ -198,7 +273,9 @@ assert st.as_dict() == dict(
     waves=4, rounds=8, link_bytes=5632, payload_bytes=256, flits=128,
     cross_pod_msgs=0, cross_pod_wire_bytes=0, cross_pod_beats=0,
         bridge_beats=0, bridge_wire_bytes=0, bridge_stall_rounds=0,
-        bridge_peak_fifo=0), st.as_dict()
+        bridge_peak_fifo=0, switch_cycles=0, switch_stall_cycles=0,
+        switch_arb_losses=0, switch_max_queue=0,
+        switch_peak_link_flits=0), st.as_dict()
 print("OK")
 """, n_devices=16)
 

@@ -169,10 +169,17 @@ for topo_name in ("ring", "mesh", "torus", "fattree"):
         direct = g.run(inp)
         sim, st_sim = ex.run(inp, mode="sim")
         spmd, st_spmd = ex.run(inp, mode="spmd")
+        buffered, st_buf = ex.run(inp, mode="buffered")
         for k in direct:
             assert np.array_equal(np.asarray(spmd[k]), np.asarray(direct[k])), (topo_name, k)
             assert np.array_equal(np.asarray(spmd[k]), np.asarray(sim[k])), (topo_name, k)
+            assert np.array_equal(np.asarray(buffered[k]), np.asarray(sim[k])), (topo_name, k)
         assert st_spmd.as_dict() == st_sim.as_dict(), (topo_name, seed)
+        # buffered payload parity: static accounting matches sim exactly
+        for f in ("waves", "payload_bytes", "flits", "cross_pod_msgs",
+                  "cross_pod_wire_bytes", "cross_pod_beats"):
+            assert getattr(st_buf, f) == getattr(st_sim, f), (topo_name, seed, f)
+        assert st_buf.switch_cycles == st_buf.rounds > 0, (topo_name, seed)
         B = 3
         binp = {"src.x": np.stack([np.arange(4.0) * (b + 1) for b in range(B)])}
         bs, stb_sim = ex.run_batch(binp, mode="sim")
