@@ -1,0 +1,6 @@
+"""``python -m repro.analysis`` — alias for the lint CLI (see `lint.main`)."""
+import sys
+
+from .lint import main
+
+sys.exit(main())

@@ -23,8 +23,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..core import (NoCConfig, NoCExecutor, PE, Port, TaskGraph, cut, make_topology,
-                    place_round_robin, resolve_placement)
+from ..core import (NoCExecutor, PE, Port, TaskGraph, cut, make_topology,
+                    resolve_placement)
 from ..kernels import ops as kops
 from ..kernels import ref as kref
 

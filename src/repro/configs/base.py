@@ -5,7 +5,6 @@ ShapeDtypeStruct stand-ins the dry-run lowers against (no allocation).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -152,7 +151,8 @@ def cell_supported(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
 def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
     """ShapeDtypeStruct stand-ins for every model input of this cell."""
     B, S = shape.global_batch, shape.seq_len
-    tok = lambda s: jax.ShapeDtypeStruct(s, jnp.int32)
+    def tok(s):
+        return jax.ShapeDtypeStruct(s, jnp.int32)
     if shape.kind == "train":
         specs = {"tokens": tok((B, S)), "labels": tok((B, S))}
     elif shape.kind == "prefill":

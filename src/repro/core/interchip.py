@@ -244,27 +244,27 @@ class _BridgeSim:
     def push(self, bridge_idx: int, nbytes: int) -> None:
         s = self.cfg.serdes
         w = self.words_for(nbytes)
-        l = self.links[bridge_idx]
-        l["pending"] += w
-        l["words"] += w
-        l["beats"] += w // s.lanes
+        lk = self.links[bridge_idx]
+        lk["pending"] += w
+        lk["words"] += w
+        lk["beats"] += w // s.lanes
 
-    def _admit_transmit(self, l: dict) -> None:
-        take = min(l["pending"], self.cfg.fifo_depth - l["occ"])
-        l["occ"] += take
-        l["pending"] -= take
-        l["peak"] = max(l["peak"], l["occ"])
-        l["occ"] = max(0, l["occ"] - self.cfg.serdes.lanes)
+    def _admit_transmit(self, lk: dict) -> None:
+        take = min(lk["pending"], self.cfg.fifo_depth - lk["occ"])
+        lk["occ"] += take
+        lk["pending"] -= take
+        lk["peak"] = max(lk["peak"], lk["occ"])
+        lk["occ"] = max(0, lk["occ"] - self.cfg.serdes.lanes)
 
     def end_round(self) -> None:
         round_stall = 0
-        for l in self.links:
-            self._admit_transmit(l)
+        for lk in self.links:
+            self._admit_transmit(lk)
             s = 0
-            while l["pending"]:
-                self._admit_transmit(l)
+            while lk["pending"]:
+                self._admit_transmit(lk)
                 s += 1
-            l["stalls"] += s
+            lk["stalls"] += s
             round_stall = max(round_stall, s)
         self.stall_rounds += round_stall
 
@@ -272,21 +272,21 @@ class _BridgeSim:
         lanes = self.cfg.serdes.lanes
         beat_b = self.cfg.serdes.beat_bytes
         drain = 0
-        for l in self.links:
-            s = -(-l["occ"] // lanes)
-            l["stalls"] += s
-            l["occ"] = 0
+        for lk in self.links:
+            s = -(-lk["occ"] // lanes)
+            lk["stalls"] += s
+            lk["occ"] = 0
             drain = max(drain, s)
         self.stall_rounds += drain
-        per = {k: dict(beats=l["beats"], wire_bytes=l["words"] * beat_b,
-                       stall_rounds=l["stalls"], peak_fifo=l["peak"])
-               for k, l in zip(self.keys, self.links)}
+        per = {k: dict(beats=lk["beats"], wire_bytes=lk["words"] * beat_b,
+                       stall_rounds=lk["stalls"], peak_fifo=lk["peak"])
+               for k, lk in zip(self.keys, self.links)}
         return BridgeStats(
             n_bridges=len(self.links),
-            beats=sum(l["beats"] for l in self.links),
-            wire_bytes=sum(l["words"] for l in self.links) * beat_b,
+            beats=sum(lk["beats"] for lk in self.links),
+            wire_bytes=sum(lk["words"] for lk in self.links) * beat_b,
             stall_rounds=self.stall_rounds,
-            peak_fifo=max((l["peak"] for l in self.links), default=0),
+            peak_fifo=max((lk["peak"] for lk in self.links), default=0),
             per_bridge=per)
 
 
@@ -469,8 +469,9 @@ def _bridged_crossbar(x: jax.Array, bprog: BridgedProgram, axis_name) -> jax.Arr
     cfg = bprog.wire_cfg
     meta = qserdes.plan(x.shape[1:], x.dtype, cfg)
     enc = jax.vmap(lambda row: qserdes.encode(row, cfg, meta)[0])(x)
-    beats = [lax.all_to_all(enc[:, l], axis_name, split_axis=0, concat_axis=0)
-             for l in range(cfg.lanes)]
+    beats = [lax.all_to_all(enc[:, ln], axis_name, split_axis=0,
+                            concat_axis=0)
+             for ln in range(cfg.lanes)]
     words = jnp.stack(beats, axis=1)                # (n_src, lanes, w)
     zero_scales = jnp.zeros((cfg.lanes, 0), words.dtype)
     dec = jax.vmap(lambda w: qserdes.decode(w, zero_scales, cfg, meta))(words)

@@ -113,6 +113,31 @@ the paper's BMVM NoC config) and powers the Tables I–III "with/without
 wrapper" overhead analogs: on TPU the wrapper cost is not LUTs/registers but
 the padding + framing + buffer bytes the NoC abstraction adds around the raw
 message payload.
+
+Static verification (``verify=``) — the analysis contract
+---------------------------------------------------------
+Because everything above is compiled *before* any value moves, it can also be
+*proven* before any value moves.  ``NoCExecutor(verify="strict")`` (the
+default) runs `repro.analysis.verify_executor` over the artifacts it just
+compiled:
+
+* deadlock freedom of ``(topo, cfg.switch_vcs)`` via the Dally–Seitz channel
+  dependency graph of the switch's actual routing function (NOC001/NOC002);
+* exactly-once delivery/conservation of the compiled route program, the
+  bridged pod projections, and every wave's pack/gather layout
+  (NOC003/NOC004);
+* placement / pod-cut / config validity (NOC007/NOC008/NOC009/NOC012) and
+  framing-mismatch warnings (NOC010);
+* capacity bounds: exact flit/link-byte totals plus sound peak-occupancy
+  upper bounds on the `NoCStats` high-water marks (NOC005/NOC013 warnings).
+
+``"strict"`` raises `repro.analysis.VerificationError` on any error-severity
+finding, ``"warn"`` reports via ``warnings.warn``, ``"off"`` skips; the full
+diagnostic list is kept on ``self.verification`` either way.  The property
+suite holds the verifier to its word: artifacts it passes must simulate to
+completion with stats inside the predicted bounds (see
+``tests/test_analysis.py`` and the error-code reference in
+`repro.analysis`).
 """
 from __future__ import annotations
 
@@ -126,7 +151,7 @@ import jax
 from . import serdes as qserdes
 from .graph import GraphError, TaskGraph
 from .partition import PartitionPlan
-from .routing import ScheduleStats, simulate_schedule
+from .routing import simulate_schedule
 from .topology import Topology
 
 
@@ -208,6 +233,16 @@ class NoCConfig:
     serdes: qserdes.QuasiSerdesConfig = dataclasses.field(
         default_factory=qserdes.QuasiSerdesConfig)
 
+    def __post_init__(self):
+        # eager NOC012 validation: a bad width/depth must fail at config
+        # construction, not deep inside a simulation
+        for f in ("flit_data_width", "flit_buffer_depth", "bridge_fifo_depth",
+                  "switch_buffer_depth", "switch_vcs"):
+            v = getattr(self, f)
+            if not isinstance(v, int) or v < 1:
+                raise ValueError(f"NOC012: NoCConfig.{f}={v!r} must be a "
+                                 f"positive integer")
+
     @property
     def flit_wire_bytes(self) -> int:
         """On-wire/storage bytes of ONE flit: ceil(width/8).  A 12-bit flit
@@ -288,9 +323,13 @@ class NoCExecutor:
     def __init__(self, graph: TaskGraph, topo: Topology,
                  placement: Optional[Mapping[str, int]] = None,
                  plan: Optional[PartitionPlan] = None,
-                 cfg: Optional[NoCConfig] = None):
+                 cfg: Optional[NoCConfig] = None,
+                 verify: str = "strict"):
         from .partition import place_round_robin
 
+        if verify not in ("strict", "warn", "off"):
+            raise ValueError(f"verify must be 'strict', 'warn', or 'off', "
+                             f"got {verify!r}")
         self.graph = graph
         self.topo = topo
         self.placement = dict(placement or (plan.placement if plan else place_round_robin(graph, topo)))
@@ -329,6 +368,23 @@ class NoCExecutor:
         self._bridge_prog = None
         self._spmd_mesh = None
         self._spmd_fn = None
+        # static verification of everything just compiled (repro.analysis):
+        # deadlock proof for (topo, switch_vcs), delivery proofs for the wave
+        # layouts and route program, placement/cut linting, capacity bounds.
+        self.verification = []
+        if verify != "off":
+            from ..analysis.diagnostics import (VerificationError, errors,
+                                                format_diagnostics)
+            from ..analysis.lint import verify_executor
+
+            self.verification = verify_executor(self)
+            if errors(self.verification) and verify == "strict":
+                raise VerificationError(self.verification)
+            if self.verification and verify == "warn":
+                import warnings
+
+                warnings.warn(format_diagnostics(self.verification),
+                              stacklevel=2)
 
     def _ensure_bridge(self):
         """Compile the partitioned (bridged) program once per executor."""
@@ -350,7 +406,6 @@ class NoCExecutor:
     def _compile_wave(self, wave: list[str]) -> _WaveProgram:
         g, cfg = self.graph, self.cfg
         n = self.topo.n_nodes
-        flit_w = cfg.flit_wire_bytes
         pod_of = self.plan.pod_of_node if self.plan is not None else None
         slots: list[_MsgSlot] = []
         pair_off: dict[tuple[int, int], int] = {}
@@ -382,7 +437,8 @@ class NoCExecutor:
             span = np.arange(off, off + slot.nbytes, dtype=np.int64)
             pack.append((s * n + d) * buf_bytes + span)
             gather.append((d * n + s) * buf_bytes + span)   # delivered is (dst, src)
-        cat = lambda xs: (np.concatenate(xs) if xs else np.zeros(0, np.int64))
+        def cat(xs):
+            return np.concatenate(xs) if xs else np.zeros(0, np.int64)
         return _WaveProgram(tuple(slots), seg, buf_bytes, cat(pack), cat(gather),
                             static,
                             tuple((s, d, nb) for (s, d), nb

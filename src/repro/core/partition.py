@@ -15,6 +15,7 @@ Three layers, mirroring §III:
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Mapping, Optional, Sequence
 
@@ -436,8 +437,8 @@ def optimize_pod_cut(graph: TaskGraph, topo: Topology, n_pods: int = 2,
     placement, pod assignment and serdes config, ready for
     ``NoCExecutor(plan=...)``."""
     if serdes_grid is None:
-        serdes_grid = [qserdes.QuasiSerdesConfig(wire_bits=wb, lanes=l, compress=cp)
-                       for wb in (8, 16, 32) for l in (1, 8)
+        serdes_grid = [qserdes.QuasiSerdesConfig(wire_bits=wb, lanes=ln, compress=cp)
+                       for wb in (8, 16, 32) for ln in (1, 8)
                        for cp in ("none", "bf16")]
     best: Optional[tuple[float, dict, tuple, qserdes.QuasiSerdesConfig]] = None
     for pods in candidate_cuts(topo, n_pods):
@@ -475,9 +476,6 @@ DEFAULT_RULES: dict[str, Optional[str | tuple[str, ...]]] = {
     "ssm_state": None,
     "layers": None,              # scanned-stack leading axis
 }
-
-
-import contextlib
 
 
 @contextlib.contextmanager

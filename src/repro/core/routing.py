@@ -292,10 +292,14 @@ def run_route_program(x: jax.Array, prog: RouteProgram,
     if axis_name is not None:
         i = lax.axis_index(axis_name)
         cx, cy = i % rx, i // rx
-        ex_x = lambda pairs: [(y * rx + s, y * rx + d)
-                              for y in range(ry) for s, d in pairs]
-        ex_y = lambda pairs: [(s * rx + xc, d * rx + xc)
-                              for xc in range(rx) for s, d in pairs]
+
+        def ex_x(pairs):
+            return [(y * rx + s, y * rx + d)
+                    for y in range(ry) for s, d in pairs]
+
+        def ex_y(pairs):
+            return [(s * rx + xc, d * rx + xc)
+                    for xc in range(rx) for s, d in pairs]
     c = x.shape[1:]
     b = x.reshape(ry, rx, *c)             # (dy, dx, *c)
     b = jnp.moveaxis(b, 1, 0)             # (dx, dy, *c)
@@ -497,7 +501,6 @@ def simulate_schedule(topo: Topology, msgs: np.ndarray, *,
         wrap = isinstance(topo, Torus2D)
         rx, ry = topo.rx, topo.ry
         c = msgs.shape[2:]
-        cflat = int(np.prod(c, dtype=np.int64)) if c else 1
         # node linear index = y*rx + x; XY dimension-ordered routing.
         m = msgs.reshape(ry, rx, ry, rx, *c)            # [sy, sx, dy, dx, *c]
         # Phase X: every row executes the line schedule concurrently — fold all

@@ -193,7 +193,8 @@ def dor_route(topo: Topology, src: int, dst: int,
 
 def simulate_switch(topo: Topology, packets: Sequence[Packet],
                     cfg: Optional[SwitchConfig] = None,
-                    record_ejections: bool = False) -> SwitchResult:
+                    record_ejections: bool = False,
+                    verify: bool = True) -> SwitchResult:
     """Cycle-accurate wormhole simulation of ``packets`` over ``topo``.
 
     Per cycle: every occupied input (port, VC) FIFO head requests its packet's
@@ -202,18 +203,28 @@ def simulate_switch(topo: Topology, packets: Sequence[Packet],
     start-of-cycle state and applied atomically, so the result is independent
     of router iteration order.  Raises :class:`DeadlockError` on a zero-move
     fixed point with flits in flight (exact: the state transition is
-    deterministic, so one immobile cycle proves permanence)."""
+    deterministic, so one immobile cycle proves permanence).
+
+    With ``verify=True`` (default) the (topology, n_vcs) combination is first
+    proven deadlock-free via the channel-dependency graph of the routing
+    function (`repro.analysis.cdg`); cyclic combinations are rejected up
+    front with the concrete channel cycle.  ``verify=False`` skips the proof
+    and lets doomed configurations run into the runtime `DeadlockError` —
+    used by the verifier benchmarks and deadlock tests."""
     cfg = cfg or SwitchConfig()
     n = topo.n_nodes
     depth = cfg.buffer_depth
     fb = cfg.flit_bytes
     if depth < 1:
         raise ValueError("buffer_depth must be >= 1")
-    needs_vc = isinstance(topo, (Ring, Torus2D))
-    if needs_vc and cfg.n_vcs < 2:
-        raise ValueError(f"{topo.name} has wraparound links: n_vcs >= 2 "
-                         f"(dateline escape channels) required for deadlock "
-                         f"freedom, got {cfg.n_vcs}")
+    if cfg.n_vcs < 1:
+        raise ValueError(f"n_vcs must be >= 1, got {cfg.n_vcs}")
+    if verify:
+        from ..analysis.cdg import check_deadlock_freedom
+
+        found = check_deadlock_freedom(topo, cfg.n_vcs, "SwitchConfig.n_vcs")
+        if found:
+            raise ValueError(str(found[0]))
 
     # -- static per-packet tables ------------------------------------------
     P = len(packets)
@@ -352,11 +363,33 @@ def simulate_switch(topo: Topology, packets: Sequence[Packet],
             if inj_ptr < P:   # idle gap: fast-forward to the next injection
                 c = packets[order[inj_ptr]].t_inject
                 continue
+            from ..analysis.cdg import find_wait_cycle
+
             stuck = [(pid, packets[pid].src, packets[pid].dst)
                      for pid in range(P) if completions[pid] < 0]
+            # wait-for map over occupied input slots: each head flit points
+            # at the downstream input FIFO it needs a credit/VC grant from
+            waits: dict[tuple[int, int, int], tuple[int, int, int]] = {}
+            for u in range(n):
+                for up, vc in rings[u]:
+                    q = srcq[u] if up == INJECT else fifos.get((u, up, vc))
+                    if not q:
+                        continue
+                    pid, _ = q[0]
+                    okey, dvc = nxt[pid][u]
+                    if okey != EJECT:
+                        waits[(u, up, vc)] = (okey, u, dvc)
+            wcyc = find_wait_cycle(waits)
+            culprit = ""
+            if wcyc:
+                hops = " -> ".join(
+                    f"[router {r} <- {'inject' if up == INJECT else up} "
+                    f"vc{vc}]" for r, up, vc in wcyc)
+                culprit = (f"; culprit wait cycle across {len(wcyc)} "
+                           f"router input(s): {hops} -> back to start")
             raise DeadlockError(
                 f"cycle {c}: no flit can move, {len(stuck)} packets wedged "
-                f"(first few: {stuck[:4]}) — cyclic buffer wait")
+                f"(first few: {stuck[:4]}) — cyclic buffer wait{culprit}")
         c += 1
     stats.cycles = c
     assert int(ejected.sum()) == sum(p.n_flits for p in packets)
@@ -445,6 +478,8 @@ def saturation_rate(topo: Topology, matrix: np.ndarray,
                 load[key] = load.get(key, 0.0) + w
             ekey = (EJECT, d)
             load[ekey] = load.get(ekey, 0.0) + w
+    if not load:            # no traffic at all (e.g. single-node topology)
+        return float("inf")
     return 1.0 / max(load.values())
 
 

@@ -50,6 +50,15 @@ class TrafficConfig:
                              f"expected one of {PATTERNS}")
         if not 0.0 < self.injection_rate:
             raise ValueError("injection_rate must be positive")
+        if not 0.0 <= self.hotspot_frac <= 1.0:
+            raise ValueError(f"hotspot_frac={self.hotspot_frac} must be "
+                             f"in [0, 1]")
+        if self.packet_flits < 1:
+            raise ValueError("packet_flits must be >= 1")
+        if self.burst_len < 1:
+            raise ValueError("burst_len must be >= 1")
+        if self.n_packets < 0:
+            raise ValueError("n_packets must be >= 0")
 
 
 def transpose_partner(topo: Topology, node: int) -> int:
@@ -72,6 +81,8 @@ def traffic_matrix(topo: Topology, cfg: TrafficConfig) -> np.ndarray:
     expects.  ``bursty`` shares uniform's spatial distribution; only its
     injection-time process differs."""
     n = topo.n_nodes
+    if n < 2:       # no destination exists; there is no traffic to describe
+        return np.zeros((n, n))
     uni = np.full((n, n), 1.0 / (n - 1))
     np.fill_diagonal(uni, 0.0)
     if cfg.pattern in ("uniform", "bursty"):
@@ -81,8 +92,12 @@ def traffic_matrix(topo: Topology, cfg: TrafficConfig) -> np.ndarray:
         hot = np.full(n, cfg.hotspot_frac)
         hot[cfg.hotspot] = 0.0
         m[:, cfg.hotspot] += hot
-        # renormalize rows (the hotspot's own row lost its hotspot share)
-        return m / m.sum(axis=1, keepdims=True)
+        # renormalize rows (the hotspot's own row lost its hotspot share);
+        # at hotspot_frac=1.0 that row is all-zero — it sends uniformly
+        # rather than dividing by zero
+        sums = m.sum(axis=1, keepdims=True)
+        m = np.where(sums > 0.0, m / np.where(sums > 0.0, sums, 1.0), uni)
+        return m
     if cfg.pattern == "transpose":
         m = np.zeros((n, n))
         for s in range(n):
@@ -96,6 +111,8 @@ def generate_traffic(topo: Topology, cfg: TrafficConfig) -> list[Packet]:
     with pattern-distributed destinations and rate-controlled injection
     times.  Deterministic in ``cfg.seed``."""
     n = topo.n_nodes
+    if n < 2:       # single-node fabric: nothing can be sent anywhere
+        return []
     rng = np.random.default_rng(cfg.seed)
     gap_mean = cfg.packet_flits / cfg.injection_rate
     packets: list[Packet] = []

@@ -16,7 +16,6 @@ from jax.experimental import pallas as pl
 
 def _kernel(u_ref, out_ref):
     u = u_ref[...]
-    deg = u.shape[-1]
     mag = jnp.abs(u)
     sgn = jnp.where(u < 0, -1.0, 1.0).astype(u.dtype)
     total_sign = jnp.prod(sgn, axis=-1, keepdims=True)

@@ -27,10 +27,7 @@ import json
 import time
 import traceback
 
-import jax
-
-from ..configs import ALL_ARCHS, SHAPES, cell_supported, get_config, input_specs
-from ..optim import AdamWConfig
+from ..configs import ALL_ARCHS, SHAPES, cell_supported, get_config
 from . import roofline as RL
 from .mesh import make_production_mesh, set_mesh
 from .steps import jit_decode, jit_prefill, jit_train_step
@@ -60,9 +57,6 @@ def _analysis_cfg(cfg, shape, m: int):
 
 def _lower_cell(cfg, shape, mesh, step_kw=None):
     """Build + lower the right step fn; returns lowered."""
-    from ..models import transformer as T
-    from ..models.layers import param_shapes
-
     if shape.kind == "train":
         jitted, state_shapes, bspecs = jit_train_step(cfg, mesh, shape,
                                                       **(step_kw or {}))

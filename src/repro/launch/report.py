@@ -15,7 +15,6 @@ import argparse
 import glob
 import json
 import os
-import sys
 
 import jax
 

@@ -19,8 +19,6 @@ import dataclasses
 import re
 from typing import Optional
 
-import numpy as np
-
 PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # bytes/s / chip
 LINK_BW = 50e9               # bytes/s / ICI link

@@ -3,7 +3,6 @@ shardings — shared by the trainer, the server, and the dry-run.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -13,7 +12,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
 from ..configs.base import ModelConfig, ShapeConfig
-from ..core.partition import DEFAULT_RULES, cross_pod_mean, logical_to_spec
+from ..core.partition import DEFAULT_RULES, cross_pod_mean
 from ..core.serdes import QuasiSerdesConfig
 from ..models import transformer as T
 from ..models.layers import param_pspecs, param_shapes
@@ -67,8 +66,8 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt_cfg: AdamWConfig,
                                total=total_steps)
 
     def grads_auto(params, batch):
-        (l, mets), grads = jax.value_and_grad(T.loss, has_aux=True)(params, batch, cfg)
-        return l, mets, grads
+        (loss, mets), grads = jax.value_and_grad(T.loss, has_aux=True)(params, batch, cfg)
+        return loss, mets, grads
 
     def grads_serdes(params, batch):
         """Fully-manual shard_map region (manual over *every* mesh axis).
@@ -86,14 +85,14 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt_cfg: AdamWConfig,
         sync_axes = ("pod",) + data_axes
 
         def pod_local(params, batch):
-            (l, mets), grads = jax.value_and_grad(T.loss, has_aux=True)(params, batch, cfg)
+            (loss, mets), grads = jax.value_and_grad(T.loss, has_aux=True)(params, batch, cfg)
             if data_axes:
                 grads = jax.tree.map(lambda g: lax.pmean(g, data_axes), grads)
             grads, _ = cross_pod_mean(grads, "pod", serdes, n_pods=n_pods,
                                       serialized=True)
-            l = lax.pmean(l, sync_axes)
+            loss = lax.pmean(loss, sync_axes)
             mets = jax.tree.map(lambda m: lax.pmean(m, sync_axes), mets)
-            return l, mets, grads
+            return loss, mets, grads
 
         blead = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
         bspec = jax.tree.map(lambda _: P(blead), batch)
@@ -106,10 +105,10 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, opt_cfg: AdamWConfig,
 
     def train_step(state, batch):
         params, opt_state = state["params"], state["opt"]
-        l, mets, grads = grads_fn(params, batch)
+        loss, mets, grads = grads_fn(params, batch)
         new_params, new_opt, om = adamw_update(params, grads, opt_state, opt_cfg,
                                                lr=lr_of(opt_state["step"]))
-        mets = dict(mets, loss=l, **om)
+        mets = dict(mets, loss=loss, **om)
         return {"params": new_params, "opt": new_opt}, mets
 
     return train_step

@@ -13,21 +13,18 @@ from __future__ import annotations
 import argparse
 import time
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
 
 from ..checkpoint import CheckpointConfig, CheckpointManager
-from ..configs import SHAPES, get_config
-from ..configs.base import ShapeConfig
+from ..configs import get_config
 from ..data import DataConfig, ShardedTokenPipeline
 from ..models import transformer as T
 from ..models.layers import init_params
 from ..optim import AdamWConfig, adamw_init
 from ..runtime import FTConfig, ResilientRunner
 from .mesh import make_host_mesh, set_mesh
-from .steps import batch_shardings, make_train_step, shardings_for_params
+from .steps import make_train_step, shardings_for_params
 
 
 def build_state(cfg, mesh, seed: int = 0):
@@ -62,7 +59,6 @@ def run(argv=None):
 
     cfg = get_config(args.arch, smoke=args.smoke)
     mesh = make_host_mesh(model=args.model_parallel)
-    shape = ShapeConfig("cli", args.seq, args.batch, "train")
     opt_cfg = AdamWConfig(lr=args.lr)
     step_fn = make_train_step(cfg, mesh, opt_cfg, pod_sync=args.pod_sync,
                               total_steps=args.steps, warmup=max(args.steps // 20, 5))

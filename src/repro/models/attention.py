@@ -13,7 +13,6 @@ with a preallocated ring cache written at ``cache["idx"]``.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax
@@ -147,7 +146,7 @@ def _blocked(q, k, v, causal: bool, kv_len, bkv: int, softcap: float, q_offset=N
     q_ids = jnp.arange(S)[:, None]
 
     def body(carry, blk):
-        acc, m, l = carry
+        acc, m, lse = carry
         kblk, vblk, t0 = blk
         s = jnp.einsum("bhgsd,bhtd->bhgst", qg, kblk.astype(cdt),
                        preferred_element_type=jnp.float32)
@@ -167,17 +166,17 @@ def _blocked(q, k, v, causal: bool, kv_len, bkv: int, softcap: float, q_offset=N
         acc = acc * alpha + jnp.einsum("bhgst,bhtd->bhgsd", p.astype(cdt),
                                        vblk.astype(cdt),
                                        preferred_element_type=jnp.float32)
-        l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
-        return (acc, m_new, l), None
+        lse = lse * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        return (acc, m_new, lse), None
 
     Dv = v.shape[-1]
     acc0 = jnp.zeros((B, Hkv, g, S, Dv), jnp.float32)
     m0 = jnp.full((B, Hkv, g, S, 1), -1e30, jnp.float32)
-    l0 = jnp.zeros((B, Hkv, g, S, 1), jnp.float32)
+    lse0 = jnp.zeros((B, Hkv, g, S, 1), jnp.float32)
     t0s = jnp.arange(nblk) * bkv
-    (acc, m, l), _ = lax.scan(jax.checkpoint(body), (acc0, m0, l0), (kb, vb, t0s),
+    (acc, m, lse), _ = lax.scan(jax.checkpoint(body), (acc0, m0, lse0), (kb, vb, t0s),
                               unroll=nblk if unroll else 1)
-    o = acc / jnp.maximum(l, 1e-30)
+    o = acc / jnp.maximum(lse, 1e-30)
     return o.reshape(B, Hq, S, Dv).astype(q.dtype)
 
 

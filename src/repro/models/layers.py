@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Mapping, Optional, Sequence
+from typing import Any, Mapping, Optional
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ Decode is the O(1) recurrent update on (conv_state, ssm_state).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional
 
 import jax
@@ -92,9 +91,9 @@ def _chunk_recurrence(h0, decay, inc):
     """h_t = decay_t * h_{t-1} + inc_t over axis 1 (chunk), assoc-scan.
     decay/inc: (B, Q, di, N); h0: (B, di, N)."""
 
-    def combine(l, r):
-        dl, il = l
-        dr, ir = r
+    def combine(left, right):
+        dl, il = left
+        dr, ir = right
         return dl * dr, ir + dr * il
 
     dec, acc = lax.associative_scan(combine, (decay, inc), axis=1)

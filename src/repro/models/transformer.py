@@ -15,8 +15,7 @@ API:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,8 +29,8 @@ from . import moe as moe_mod
 from . import ssm as ssm_mod
 from . import xlstm as xlstm_mod
 from .attention import AttnConfig, attention, attn_specs, init_cache as attn_init_cache
-from .layers import (ParamSpec, cross_entropy, layer_norm, mlp_apply, mlp_specs,
-                     rms_norm, stack_specs, swiglu)
+from .layers import (ParamSpec, cross_entropy, mlp_apply, mlp_specs,
+                     rms_norm, stack_specs)
 
 
 # ---------------------------------------------------------------------------

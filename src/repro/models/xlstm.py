@@ -23,7 +23,6 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from ..core.partition import constrain
 from .layers import ParamSpec, rms_norm
 
 

@@ -8,7 +8,7 @@ optimizer memory scales down with TP; optionally shard replicated leaves over
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +25,8 @@ class AdamWConfig:
 
 
 def adamw_init(params) -> dict:
-    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    def zeros(p):
+        return jnp.zeros_like(p, dtype=jnp.float32)
     return {
         "m": jax.tree.map(zeros, params),
         "v": jax.tree.map(zeros, params),

@@ -13,7 +13,7 @@ modulo batch partitioning).
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Sequence
 
 import numpy as np
 

@@ -1,0 +1,511 @@
+"""Static verifier property suite (`repro.analysis`).
+
+The verifier's word is held against the simulators:
+
+* **deadlock proofs** — `deadlock_cycle` verdicts pinned on known
+  (topology, n_vcs) combinations, including the two the old hand guard got
+  wrong (2-node ring and 2x2 torus are provably safe at 1 VC); the property
+  gate: verifier-safe ⇒ `simulate_switch` drains an all-to-all at depth 1,
+  verifier-cyclic ⇒ construction is rejected with the concrete cycle;
+* **delivery proofs** — compiled route programs / bridged programs / wave
+  layouts verify clean, and seeded corruptions (wrong src_table, dropped
+  bridge, duplicated pack index, transposed gather) are each caught with the
+  right NOC0xx code;
+* **capacity bounds** — exact fields (flits, payload/link bytes, bridge
+  counters) equal the buffered/bridged NoCStats bit-for-bit on all four
+  topologies, peaks bound the measured high-water marks, and a competing-flow
+  construction shows the queue bound *tight* (bound == measured == depth);
+* **linter + wiring** — NOC0xx codes from the config linters,
+  ``NoCExecutor(verify=)`` strict/warn/off behavior, eager NoCConfig
+  validation, the runtime DeadlockError culprit-cycle report, and the
+  `python -m repro.analysis.lint` CLI;
+* **traffic edge cases** — zero/singular fabrics, hotspot_frac 0/1, row-sum
+  conservation of every pattern's matrix.
+
+Property tests use the hypothesis shim in tests/conftest.py (seeded random
+cases when hypothesis is absent).
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro import analysis as A
+from repro.core import (NoCConfig, NoCExecutor, PE, Port, TaskGraph, cut,
+                        make_topology)
+from repro.core.routing import compile_routes
+from repro.core.switch import (DeadlockError, Packet, SwitchConfig,
+                               simulate_switch)
+from repro.core.traffic import (PATTERNS, TrafficConfig, generate_traffic,
+                                traffic_matrix)
+
+TOPOLOGIES = ["ring", "mesh", "torus", "fattree"]
+
+
+def _diamond():
+    g = TaskGraph("diamond")
+    g.add(PE("src", lambda x: {"a": x + 1, "b": x * 3}, (Port("x", (4,)),),
+             (Port("a", (4,)), Port("b", (4,)))))
+    g.add(PE("l", lambda a: {"o": a * a}, (Port("a", (4,)),), (Port("o", (4,)),)))
+    g.add(PE("r", lambda b: {"o": b - 2}, (Port("b", (4,)),), (Port("o", (4,)),)))
+    g.add(PE("join", lambda l, r: {"out": l + r},
+             (Port("l", (4,)), Port("r", (4,))), (Port("out", (4,)),)))
+    g.connect("src.a", "l.a")
+    g.connect("src.b", "r.b")
+    g.connect("l.o", "join.l")
+    g.connect("r.o", "join.r")
+    return g
+
+
+def _ldpc_setup():
+    from repro.apps import ldpc
+
+    H = ldpc.fano_plane_H()
+    g, _ = ldpc.build_ldpc_graph(H)
+    rng = np.random.default_rng(0)
+    llr = ldpc.awgn_llr(np.zeros(7, np.int8), 3.0, rng)
+    inputs = {}
+    for b in range(H.shape[1]):
+        inputs[f"bit{b}.u0"] = jnp.asarray(llr[b:b + 1], jnp.float32)
+    for c in range(H.shape[0]):
+        for j_c, b in enumerate(np.nonzero(H[c])[0]):
+            inputs[f"chk{c}.u{j_c}"] = jnp.asarray(llr[b:b + 1], jnp.float32)
+    return g, inputs
+
+
+# ---------------------------------------------------------------------------
+# channel-dependency deadlock proofs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tname,n,vcs,safe", [
+    ("ring", 8, 1, False),     # the classic cyclic wedge
+    ("ring", 8, 2, True),      # dateline escape VC breaks it
+    ("ring", 2, 1, True),      # single-hop routes: the hand guard's false positive
+    ("torus", 4, 1, True),     # 2x2 torus: ditto
+    ("torus", 16, 1, False),
+    ("torus", 16, 2, True),
+    ("mesh", 16, 1, True),     # no wraparound: safe at any VC count
+    ("fattree", 8, 1, True),
+])
+def test_deadlock_verdicts_pinned(tname, n, vcs, safe):
+    topo = make_topology(tname, n)
+    cyc = A.deadlock_cycle(topo, vcs)
+    assert (cyc is None) == safe, (tname, n, vcs, cyc)
+    diags = A.check_deadlock_freedom(topo, vcs)
+    if safe:
+        assert diags == []
+    else:
+        assert [d.code for d in diags] == ["NOC001"]
+        # the report names a concrete channel cycle, and it is a real cycle:
+        # consecutive channels chain head-to-tail through the same router
+        assert "->" in diags[0].message and "n_vcs" in diags[0].message
+        for (u, v, _), (u2, _, _) in zip(cyc, cyc[1:] + cyc[:1]):
+            assert v == u2, cyc
+
+
+def test_check_deadlock_freedom_rejects_zero_vcs():
+    diags = A.check_deadlock_freedom(make_topology("mesh", 4), 0)
+    assert [d.code for d in diags] == ["NOC002"]
+
+
+@settings(max_examples=24, deadline=None)
+@given(st.sampled_from(TOPOLOGIES), st.integers(min_value=2, max_value=9),
+       st.integers(min_value=1, max_value=3))
+def test_verifier_verdict_matches_simulator(tname, n, vcs):
+    """verifier-safe ⇒ an adversarial depth-1 all-to-all drains;
+    verifier-cyclic ⇒ simulate_switch refuses the combo up front."""
+    topo = make_topology(tname, n)
+    pkts = [Packet(s, d, 2) for s in range(n) for d in range(n) if s != d]
+    scfg = SwitchConfig(buffer_depth=1, n_vcs=vcs, max_cycles=100_000)
+    if A.deadlock_cycle(topo, vcs) is None:
+        res = simulate_switch(topo, pkts, scfg, verify=False)
+        assert res.stats.packets == len(pkts), (tname, n, vcs)
+    else:
+        with pytest.raises(ValueError, match="NOC001"):
+            simulate_switch(topo, pkts, scfg)
+
+
+def test_one_vc_combos_the_hand_guard_rejected_now_run():
+    """ring n=2 and 2x2 torus are provably safe at 1 VC and must simulate."""
+    for tname, n in (("ring", 2), ("torus", 4)):
+        topo = make_topology(tname, n)
+        pkts = [Packet(s, d, 3) for s in range(n) for d in range(n) if s != d]
+        res = simulate_switch(topo, pkts,
+                              SwitchConfig(buffer_depth=1, n_vcs=1))
+        assert res.stats.packets == len(pkts)
+
+
+def test_runtime_deadlock_reports_culprit_cycle():
+    topo = make_topology("ring", 8)
+    pkts = [Packet(s, (s + 4) % 8, 4) for s in range(8) for _ in range(4)]
+    with pytest.raises(DeadlockError, match="culprit wait cycle"):
+        simulate_switch(topo, pkts,
+                        SwitchConfig(buffer_depth=1, n_vcs=1,
+                                     max_cycles=50_000), verify=False)
+
+
+def test_find_wait_cycle():
+    assert A.find_wait_cycle({1: 2, 2: 3, 3: 1, 9: 1}) in (
+        [1, 2, 3], [2, 3, 1], [3, 1, 2])
+    assert A.find_wait_cycle({1: 2, 2: 3}) is None
+    assert A.find_wait_cycle({}) is None
+
+
+# ---------------------------------------------------------------------------
+# delivery / conservation proofs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tname,n", [("ring", 8), ("mesh", 16),
+                                     ("torus", 16), ("fattree", 8),
+                                     ("ring", 5), ("mesh", 6)])
+def test_route_programs_verify_clean(tname, n):
+    assert A.verify_route_program(compile_routes(make_topology(tname, n))) == []
+
+
+def _corrupt_first_move(prog, **repl):
+    ph = prog.phases[0]
+    rnd = ph.rounds[0]
+    mv = dataclasses.replace(rnd.moves[0], **repl)
+    rnd = dataclasses.replace(rnd, moves=(mv,) + rnd.moves[1:])
+    ph = dataclasses.replace(ph, rounds=(rnd,) + ph.rounds[1:])
+    return dataclasses.replace(prog, phases=(ph,) + prog.phases[1:])
+
+
+def test_corrupted_route_program_is_caught():
+    prog = compile_routes(make_topology("ring", 8))
+    mv = prog.phases[0].rounds[0].moves[0]
+    # erase a commit: some (dst, src) pair is never delivered
+    bad = _corrupt_first_move(prog, src_table=tuple(-1 for _ in mv.src_table))
+    assert "NOC003" in {d.code for d in A.verify_route_program(bad)}
+    # mis-route a hop to a non-neighbor
+    (s0, d0), *rest = mv.perm
+    bad = _corrupt_first_move(prog, perm=((s0, (d0 + 1) % 8),) + tuple(rest))
+    assert "NOC003" in {d.code for d in A.verify_route_program(bad)}
+    # double-deliver: point a commit at a pair the diagonal already covered
+    bad = _corrupt_first_move(prog, src_table=tuple(
+        i for i, _ in enumerate(mv.src_table)))
+    assert "NOC003" in {d.code for d in A.verify_route_program(bad)}
+
+
+@pytest.mark.parametrize("tname", TOPOLOGIES)
+def test_wave_layouts_verify_clean(tname):
+    g = _diamond()
+    topo = make_topology(tname, 6)
+    ex = NoCExecutor(g, topo)
+    n = topo.n_nodes
+    for w, prog in enumerate(ex.programs):
+        assert A.verify_wave_layout(prog, n, f"w{w}",
+                                    ex.cfg.flit_wire_bytes) == []
+
+
+def test_corrupted_wave_layout_is_caught():
+    ex = NoCExecutor(_diamond(), make_topology("mesh", 6))
+    prog = next(p for p in ex.programs if p.pack_idx.size > 1)
+    n = 6
+    # duplicate pack index: two payload bytes scatter onto one cube byte
+    pack = prog.pack_idx.copy()
+    pack[1] = pack[0]
+    bad = dataclasses.replace(prog, pack_idx=pack)
+    assert "NOC003" in {d.code for d in A.verify_wave_layout(bad, n, "w")}
+    # gather not the transpose image of pack
+    gather = prog.gather_idx.copy()
+    gather[0], gather[-1] = gather[-1], gather[0]
+    bad = dataclasses.replace(prog, gather_idx=gather)
+    assert "NOC003" in {d.code for d in A.verify_wave_layout(bad, n, "w")}
+
+
+def test_bridged_program_verifies_clean_and_corruptions_caught():
+    g = _diamond()
+    topo = make_topology("mesh", 6)
+    placement = {"src": 0, "l": 2, "r": 3, "join": 5}
+    pods = [0, 0, 0, 1, 1, 1]
+    plan = cut(g, placement, pods)
+    ex = NoCExecutor(g, topo, placement=placement, plan=plan)
+    bprog = ex._ensure_bridge()
+    assert A.errors(A.verify_bridged_program(bprog)) == []
+    # wrong pod table length
+    bad = dataclasses.replace(bprog, pod_of_node=(0, 0, 1))
+    assert "NOC008" in {d.code for d in A.verify_bridged_program(bad)}
+    # drop a bridge: some cut hop loses its serdes endpoint
+    assert bprog.bridges, "cut produced no bridges; test setup is broken"
+    bad = dataclasses.replace(bprog, bridges=bprog.bridges[:-1])
+    assert "NOC004" in {d.code for d in A.verify_bridged_program(bad)}
+    # relabel a node's pod: bridge pod tags now disagree
+    flipped = list(bprog.pod_of_node)
+    flipped[0] = 1 - flipped[0]
+    bad = dataclasses.replace(bprog, pod_of_node=tuple(flipped))
+    assert "NOC004" in {d.code for d in A.verify_bridged_program(bad)}
+
+
+# ---------------------------------------------------------------------------
+# capacity bounds vs measured NoCStats
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tname,n", [("ring", 8), ("mesh", 16),
+                                     ("torus", 16), ("fattree", 8)])
+def test_bounds_exact_and_sound_vs_buffered_ldpc(tname, n):
+    g, inputs = _ldpc_setup()
+    ex = NoCExecutor(g, make_topology(tname, n))
+    rep = A.executor_bounds(ex)
+    _, st = ex.run(inputs, mode="buffered")
+    # exact fields: bit-for-bit against the cycle-accurate simulation
+    assert rep.flits == st.flits
+    assert rep.payload_bytes == st.payload_bytes
+    assert rep.link_bytes == st.link_bytes
+    # sound bounds on the high-water marks
+    assert st.switch_max_queue <= rep.peak_queue
+    assert st.switch_peak_link_flits <= rep.peak_link_flits
+
+
+@pytest.mark.parametrize("tname", TOPOLOGIES)
+def test_bounds_exact_and_sound_vs_buffered_diamond(tname):
+    g = _diamond()
+    ex = NoCExecutor(g, make_topology(tname, 6))
+    rep = A.executor_bounds(ex)
+    _, st = ex.run({"src.x": jnp.arange(4.0)}, mode="buffered")
+    assert (rep.flits, rep.payload_bytes, rep.link_bytes) == \
+        (st.flits, st.payload_bytes, st.link_bytes)
+    assert st.switch_max_queue <= rep.peak_queue
+    assert st.switch_peak_link_flits <= rep.peak_link_flits
+
+
+def test_queue_bound_tight_under_competing_flows():
+    """Three sources streaming into one ejection port: the losing input FIFOs
+    fill to depth, so bound == measured == switch_buffer_depth, and NOC005
+    predicts exactly that."""
+    g = TaskGraph("star")
+    for i in (1, 2, 3):
+        g.add(PE(f"s{i}", lambda x: {"o": x * 2.0}, (Port("x", (32,)),),
+                 (Port("o", (32,)),)))
+    g.add(PE("sink", lambda a, b, c: {"y": a + b + c},
+             (Port("a", (32,)), Port("b", (32,)), Port("c", (32,))),
+             (Port("y", (32,)),)))
+    g.connect("s1.o", "sink.a")
+    g.connect("s2.o", "sink.b")
+    g.connect("s3.o", "sink.c")
+    ex = NoCExecutor(g, make_topology("ring", 4),
+                     placement={"s1": 1, "s2": 2, "s3": 3, "sink": 0},
+                     verify="off")
+    rep = A.executor_bounds(ex)
+    _, st = ex.run({f"s{i}.x": jnp.arange(32.0) + i for i in (1, 2, 3)},
+                   mode="buffered")
+    depth = ex.cfg.switch_buffer_depth
+    assert rep.peak_queue == st.switch_max_queue == depth
+    assert any(d.code == "NOC005" for d in rep.diagnostics)
+
+
+def test_bridge_counters_exact_vs_bridged_sim():
+    g, inputs = _ldpc_setup()
+    from repro.core import place_round_robin
+
+    topo = make_topology("mesh", 16)
+    placement = place_round_robin(g, topo)
+    pods = [0] * 8 + [1] * 8
+    plan = cut(g, placement, pods)
+    ex = NoCExecutor(g, topo, placement=placement, plan=plan)
+    rep = A.executor_bounds(ex)
+    _, st = ex.run(inputs, mode="sim")
+    assert rep.bridge_beats == st.bridge_beats
+    assert rep.bridge_wire_bytes == st.bridge_wire_bytes
+    assert rep.bridge_stall_rounds == st.bridge_stall_rounds
+    assert rep.bridge_peak_fifo == st.bridge_peak_fifo
+
+
+def test_check_traffic_codes():
+    topo = make_topology("mesh", 16)
+    # under saturation: clean
+    assert A.check_traffic(topo, TrafficConfig(injection_rate=0.01)) == []
+    # hopeless offered load
+    diags = A.check_traffic(topo, TrafficConfig(injection_rate=50.0))
+    assert [d.code for d in diags] == ["NOC006"]
+    # single-node fabric: nothing can be sent
+    diags = A.check_traffic(make_topology("ring", 1),
+                            TrafficConfig(injection_rate=0.1))
+    assert [d.code for d in diags] == ["NOC014"]
+    # hotspot node outside the fabric
+    diags = A.check_traffic(topo, TrafficConfig(pattern="hotspot",
+                                                injection_rate=0.1,
+                                                hotspot=99))
+    assert [d.code for d in diags] == ["NOC014"]
+
+
+# ---------------------------------------------------------------------------
+# linters + executor wiring
+# ---------------------------------------------------------------------------
+
+def test_lint_placement_codes():
+    g = _diamond()
+    topo = make_topology("mesh", 4)
+    ok = {"src": 0, "l": 1, "r": 2, "join": 3}
+    assert A.lint_placement(g, topo, ok) == []
+    codes = {d.code for d in A.lint_placement(
+        g, topo, {**ok, "ghost": 1, "join": 9})}
+    assert codes == {"NOC007"}
+    # missing PE
+    missing = dict(ok)
+    del missing["join"]
+    assert {d.code for d in A.lint_placement(g, topo, missing)} == {"NOC007"}
+
+
+def test_lint_noc_config_codes():
+    topo = make_topology("ring", 8)
+    assert A.lint_noc_config(NoCConfig(), topo) == []
+    # framing warning: 12-bit flits pad to 2 bytes
+    diags = A.lint_noc_config(NoCConfig(flit_data_width=12))
+    assert "NOC010" in {d.code for d in diags}
+    # cyclic combo flagged through the config linter too
+    diags = A.lint_noc_config(NoCConfig(switch_vcs=1), topo)
+    assert "NOC001" in {d.code for d in diags}
+
+
+def test_lint_model_config_codes():
+    from repro import configs
+
+    moe = configs.get_config("qwen3-moe-235b-a22b")
+    assert any("moe" in layer for layer in moe.pattern)
+    assert A.lint_model_config(moe, n_ranks=None) == []
+    assert moe.n_experts % 4 == 0
+    assert A.lint_model_config(moe, n_ranks=4) == []
+    diags = A.lint_model_config(moe, n_ranks=7)
+    assert [d.code for d in diags] == ["NOC011"]
+    assert "dense reference" in diags[0].message
+    dense = configs.get_config("llama3.2-1b")
+    assert A.lint_model_config(dense, n_ranks=7) == []
+
+
+def test_executor_verify_modes():
+    g = _diamond()
+    bad_cfg = NoCConfig(switch_vcs=1)
+    ring = make_topology("ring", 8)
+    # strict (default): VerificationError carrying the diagnostics
+    with pytest.raises(A.VerificationError) as ei:
+        NoCExecutor(g, ring, cfg=bad_cfg)
+    assert "NOC001" in {d.code for d in ei.value.diagnostics}
+    # warn: constructs, but reports
+    with pytest.warns(UserWarning, match="NOC001"):
+        ex = NoCExecutor(g, ring, cfg=bad_cfg, verify="warn")
+    assert "NOC001" in {d.code for d in ex.verification}
+    # off: constructs silently, nothing recorded
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ex = NoCExecutor(g, ring, cfg=bad_cfg, verify="off")
+    assert ex.verification == []
+    # clean configs keep their (warning-only) findings on the executor
+    ex = NoCExecutor(g, ring)
+    assert A.errors(ex.verification) == []
+    with pytest.raises(ValueError, match="verify"):
+        NoCExecutor(g, ring, verify="loud")
+
+
+def test_verify_executor_flags_bad_placement():
+    g = _diamond()
+    with pytest.raises(A.VerificationError) as ei:
+        NoCExecutor(g, make_topology("mesh", 4),
+                    placement={"src": 0, "l": 1, "r": 2, "join": 77})
+    assert "NOC007" in {d.code for d in ei.value.diagnostics}
+
+
+def test_nocconfig_rejects_bad_fields_eagerly():
+    for field, value in [("flit_data_width", 0), ("flit_buffer_depth", -1),
+                         ("bridge_fifo_depth", 0), ("switch_buffer_depth", 0),
+                         ("switch_vcs", 0)]:
+        with pytest.raises(ValueError, match="NOC012"):
+            NoCConfig(**{field: value})
+
+
+def test_lint_cli():
+    from repro.analysis.lint import main
+
+    assert main(["benchmarks"]) == 0
+    assert main(["configs"]) == 0
+    assert main(["nope"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# traffic edge cases (core/traffic.py)
+# ---------------------------------------------------------------------------
+
+def test_traffic_config_validation():
+    with pytest.raises(ValueError, match="injection_rate"):
+        TrafficConfig(injection_rate=0.0)
+    with pytest.raises(ValueError, match="hotspot_frac"):
+        TrafficConfig(hotspot_frac=1.5)
+    with pytest.raises(ValueError, match="packet_flits"):
+        TrafficConfig(packet_flits=0)
+    with pytest.raises(ValueError, match="burst_len"):
+        TrafficConfig(burst_len=0)
+    with pytest.raises(ValueError, match="n_packets"):
+        TrafficConfig(n_packets=-1)
+    with pytest.raises(ValueError, match="pattern"):
+        TrafficConfig(pattern="tornado")
+
+
+def test_traffic_single_node_topology():
+    topo = make_topology("ring", 1)
+    for pattern in PATTERNS:
+        cfg = TrafficConfig(pattern=pattern, injection_rate=0.1)
+        assert np.array_equal(traffic_matrix(topo, cfg), np.zeros((1, 1)))
+        assert generate_traffic(topo, cfg) == []
+
+
+@pytest.mark.parametrize("tname,n", [("ring", 8), ("mesh", 16),
+                                     ("torus", 16), ("fattree", 8)])
+def test_traffic_matrix_rows_conserve(tname, n):
+    topo = make_topology(tname, n)
+    for pattern in PATTERNS:
+        for frac in (0.0, 0.3, 1.0):
+            cfg = TrafficConfig(pattern=pattern, injection_rate=0.1,
+                                hotspot=5, hotspot_frac=frac)
+            m = traffic_matrix(topo, cfg)
+            assert np.allclose(m.sum(axis=1), 1.0), (pattern, frac)
+            assert np.all(np.diag(m) == 0.0), (pattern, frac)
+            assert np.all(m >= 0.0), (pattern, frac)
+
+
+def test_hotspot_extremes():
+    topo = make_topology("mesh", 16)
+    # frac=0 degenerates to uniform
+    m0 = traffic_matrix(topo, TrafficConfig(pattern="hotspot",
+                                            injection_rate=0.1,
+                                            hotspot=5, hotspot_frac=0.0))
+    uni = traffic_matrix(topo, TrafficConfig(injection_rate=0.1))
+    assert np.allclose(m0, uni)
+    # frac=1: every other node sends only to the hotspot; the hotspot itself
+    # falls back to uniform instead of a zero row
+    m1 = traffic_matrix(topo, TrafficConfig(pattern="hotspot",
+                                            injection_rate=0.1,
+                                            hotspot=5, hotspot_frac=1.0))
+    for s in range(16):
+        if s != 5:
+            assert m1[s, 5] == 1.0
+    assert np.allclose(m1[5], uni[5])
+    # drawn packets follow: every non-hotspot source targets node 5
+    pkts = generate_traffic(topo, TrafficConfig(pattern="hotspot",
+                                                injection_rate=0.5,
+                                                hotspot=5, hotspot_frac=1.0,
+                                                n_packets=4))
+    for p in pkts:
+        if p.src != 5:
+            assert p.dst == 5
+
+
+def test_generate_traffic_counts_and_low_rate():
+    topo = make_topology("mesh", 9)
+    for pattern in PATTERNS:
+        cfg = TrafficConfig(pattern=pattern, injection_rate=0.001,
+                            n_packets=3, hotspot=2)
+        pkts = generate_traffic(topo, cfg)
+        assert len(pkts) == 9 * 3          # exactly n_packets per source
+        assert all(p.src != p.dst for p in pkts)
+        assert all(0 <= p.dst < 9 for p in pkts)
+        # a near-zero rate spreads injections out but still emits them all
+        # (bursty fits n_packets=3 < burst_len into one t=0 burst)
+        if pattern != "bursty":
+            assert max(p.t_inject for p in pkts) > 0
+        cfg0 = TrafficConfig(pattern=pattern, injection_rate=0.001,
+                             n_packets=0, hotspot=2)
+        assert generate_traffic(topo, cfg0) == []

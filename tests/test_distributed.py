@@ -113,7 +113,7 @@ print("OK")
 def test_elastic_rescale_resumes():
     """Train 4 steps on 8 devices, checkpoint, restore + reshard on 4 devices,
     continue — loss stays finite and state resharding is exact."""
-    import tempfile, textwrap
+    import tempfile
     with tempfile.TemporaryDirectory() as d:
         run_with_devices(f"""
 import numpy as np, jax, jax.numpy as jnp

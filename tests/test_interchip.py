@@ -381,8 +381,8 @@ def test_optimize_pod_cut_co_optimizes():
 
     g, _ = ldpc.build_ldpc_graph(ldpc.fano_plane_H())
     topo = make_topology("mesh", 16)
-    grid = [QuasiSerdesConfig(wire_bits=wb, lanes=l)
-            for wb in (8, 16) for l in (1, 8)]
+    grid = [QuasiSerdesConfig(wire_bits=wb, lanes=ln)
+            for wb in (8, 16) for ln in (1, 8)]
     plan, cost = optimize_pod_cut(g, topo, n_pods=2, serdes_grid=grid,
                                   iters=400, seed=0)
     assert plan.n_pods == 2 and plan.serdes_cfg in grid

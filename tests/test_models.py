@@ -9,7 +9,7 @@ import jax.numpy as jnp
 
 from repro.configs import ALL_ARCHS, get_config
 from repro.models import transformer as T
-from repro.models.layers import count_params, init_params
+from repro.models.layers import init_params
 
 
 def _batch_for(cfg, B, S, rng, labels=True):

@@ -1,7 +1,4 @@
 """Beyond-paper performance variants must preserve semantics."""
-import numpy as np
-import pytest
-
 import jax
 import jax.numpy as jnp
 

@@ -1,7 +1,6 @@
 """Quasi-SERDES endpoints: framing roundtrip, compression error bounds,
 error feedback kills bias over repeated steps."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

@@ -39,6 +39,7 @@ def test_pipeline_resume_exactness():
     p = ShardedTokenPipeline(cfg)
     seen = [next(p) for _ in range(4)]
     state = p.state()
+    assert state["step"] == 4
     p.close()
     p2 = ShardedTokenPipeline(cfg, start_step=2)
     assert np.array_equal(next(p2)["tokens"], seen[2]["tokens"])

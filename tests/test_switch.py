@@ -34,7 +34,7 @@ import jax.numpy as jnp
 
 from repro.core import (NoCConfig, NoCExecutor, PE, Port, TaskGraph,
                         make_topology)
-from repro.core.switch import (DeadlockError, Packet, SwitchConfig,
+from repro.core.switch import (Packet, SwitchConfig,
                                dor_route, link_loads, saturation_rate,
                                simulate_switch, simulate_wormhole_cube,
                                switch_lower_bound)

@@ -1,5 +1,4 @@
 """Topology invariants (CONNECT analog), incl. the paper's Table-V ordering."""
-import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 

@@ -1,6 +1,5 @@
 """End-to-end training integration on the host devices (1 CPU)."""
 import numpy as np
-import pytest
 
 
 def test_tiny_training_loss_decreases():
