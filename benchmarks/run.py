@@ -41,6 +41,11 @@ Tables:
                      lower-bound/saturation model, with drain + exactly-once
                      + bound gates), plus a torus depth-1 deadlock-freedom
                      gate and an executor-level buffered-vs-sim parity row.
+  table11_observability — telemetry subsystem gates: trace↔NoCStats bit-exact
+                     parity (sim + buffered), zero events allocated with
+                     tracing off plus the on/off overhead ratio, and the
+                     committed sample Perfetto trace re-validated against the
+                     Chrome trace-event schema.
   placement_search — annealing optimize_placement vs round-robin/greedy:
                      Σ traffic×hops cost (and cross-pod cut bytes) for the
                      LDPC / BMVM / particle-filter graphs.
@@ -51,6 +56,7 @@ Tables:
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import numpy as np
@@ -639,6 +645,79 @@ def table10_verify(fast: bool) -> list[str]:
     return rows
 
 
+def table11_observability(fast: bool) -> list[str]:
+    """Telemetry subsystem gates (CI goes red on violation):
+
+      * parity — aggregating a full trace (`telemetry.trace_stats`) of a
+        BMVM run reproduces the engine's NoCStats bit-exactly, for both the
+        schedule simulator and the cycle-accurate buffered switch;
+      * zero overhead off — running untraced allocates zero TraceEvents, and
+        the traced/untraced wall-clock ratio is reported;
+      * schema — a freshly exported trace validates against the Chrome
+        trace-event schema, and the committed sample
+        ``benchmarks/SAMPLE_trace_perfetto.json`` (written on first run)
+        keeps validating, so the on-disk format can't drift silently."""
+    import json
+    import os
+
+    from repro.apps import bmvm
+    from repro.core import NoCExecutor, make_topology
+    from repro.kernels import ref as kref
+    from repro.telemetry import (Tracer, chrome_trace, events_allocated,
+                                 trace_stats, validate_chrome_trace)
+
+    rng = np.random.default_rng(11)
+    cfg = bmvm.BMVMConfig(n=64, k=8, fold=2)
+    A = rng.integers(0, 2, (64, 64)).astype(np.uint8)
+    v = rng.integers(0, 2, (64,)).astype(np.uint8)
+    lut = np.asarray(bmvm.preprocess(A, cfg))
+    g, feedback = bmvm.build_bmvm_graph(lut, cfg)
+    vw = np.asarray(kref.gf2_pack_vector(jnp.asarray(v), cfg.k), np.uint32)
+    f = cfg.fold
+    inputs = {f"lut{i}.v": vw[i * f:(i + 1) * f] for i in range(cfg.n_pe)}
+    topo = make_topology("mesh", 2 * cfg.n_pe)
+    r = 2 if fast else 5
+    rows = []
+    # gate 1: trace -> NoCStats parity, schedule sim + buffered switch
+    for mode in ("sim", "buffered"):
+        tr = Tracer()
+        ex = NoCExecutor(g, topo, trace=tr)
+        _, st = ex.run_iterative(inputs, feedback, r, mode=mode)
+        agg = trace_stats(tr)
+        assert agg.as_dict() == st.as_dict(), (mode, agg.as_dict(), st.as_dict())
+        rows.append(f"table11_parity_{mode},0,events={len(tr)} "
+                    f"rounds={st.rounds} bit_exact=True")
+    # gate 2: tracing off allocates nothing; report the on/off overhead
+    ex_off = NoCExecutor(g, topo)
+    ex_off.run_iterative(inputs, feedback, 1, mode="sim")   # jit warmup
+    before = events_allocated()
+    t_off = _timeit(lambda: ex_off.run_iterative(inputs, feedback, r,
+                                                 mode="sim"), n=3, warmup=1)
+    assert events_allocated() == before, "untraced run allocated TraceEvents"
+    ex_on = NoCExecutor(g, topo, trace=True)
+    ex_on.run_iterative(inputs, feedback, 1, mode="sim")
+    t_on = _timeit(lambda: ex_on.run_iterative(inputs, feedback, r,
+                                               mode="sim"), n=3, warmup=1)
+    rows.append(f"table11_overhead,{t_on:.0f},untraced_us={t_off:.0f} "
+                f"traced_over_untraced={t_on / max(t_off, 1e-9):.3f}")
+    # gate 3: exported trace validates; the committed sample keeps validating
+    tr = Tracer()
+    ex = NoCExecutor(g, topo, trace=tr)
+    ex.run_iterative(inputs, feedback, 2, mode="sim")
+    doc = chrome_trace(tr)
+    n_ev = validate_chrome_trace(doc)
+    sample = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "SAMPLE_trace_perfetto.json")
+    if not os.path.exists(sample):
+        with open(sample, "w") as fh:
+            json.dump(doc, fh, indent=1)
+            fh.write("\n")
+    n_sample = validate_chrome_trace(json.load(open(sample)))
+    rows.append(f"table11_schema,0,fresh_events={n_ev} "
+                f"sample_events={n_sample} valid=True")
+    return rows
+
+
 def placement_search(fast: bool) -> list[str]:
     """Annealing placement search vs round-robin/greedy on the app graphs."""
     from repro.apps import bmvm, ldpc
@@ -751,6 +830,7 @@ TABLES = {
     "table8_interchip": table8_interchip,
     "table9_congestion": table9_congestion,
     "table10_verify": table10_verify,
+    "table11_observability": table11_observability,
     "placement_search": placement_search,
     "fig_ldpc": fig_ldpc,
     "fig_pf": fig_pf,
@@ -784,17 +864,45 @@ def _parse_row(row: str) -> dict:
     return parsed
 
 
+def _snapshot_meta() -> dict:
+    """Provenance stamp for a snapshot: where/what produced these numbers.
+
+    A BENCH_*.json diff is only meaningful against its recording environment
+    — the stamp makes "the numbers moved" attributable to a code change vs a
+    toolchain/host change."""
+    import platform
+    import subprocess
+
+    try:
+        sha = subprocess.run(["git", "rev-parse", "HEAD"],
+                             capture_output=True, text=True, timeout=10,
+                             cwd=os.path.dirname(os.path.abspath(__file__)),
+                             ).stdout.strip() or "unknown"
+    except Exception:
+        sha = "unknown"
+    return {
+        "git_sha": sha,
+        "jax": jax.__version__,
+        "numpy": np.__version__,
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "devices": jax.device_count(),
+        "backend": jax.default_backend(),
+    }
+
+
 def _write_snapshot(table: str, rows: list[str], fast: bool) -> str:
     """Persist a table's rows as benchmarks/BENCH_<key>.json.
 
     Timings (`us` and any *_us key) are environment noise, so the snapshot
-    separates them from the derived counters a future PR can diff exactly."""
+    separates them from the derived counters a future PR can diff exactly;
+    `meta` (git SHA, jax/numpy versions, host) records the environment the
+    noise came from."""
     import json
-    import os
 
     path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         SNAPSHOTS[table])
-    payload = {"table": table, "fast": fast,
+    payload = {"table": table, "fast": fast, "meta": _snapshot_meta(),
                "rows": [_parse_row(r) for r in rows]}
     with open(path, "w") as fh:
         json.dump(payload, fh, indent=1, sort_keys=True)

@@ -5,7 +5,9 @@
 1. Express an app as a message-passing TaskGraph (phase-1).
 2. Map it onto a packet-switched NoC topology and run it (phase-2, single pod).
 3. Cut the NoC across two pods with quasi-SERDES endpoints — same results.
-4. Train a (reduced) llama3.2-1b for 100 steps with the LM generalization.
+4. Trace a run: the event timeline aggregates back to the same NoCStats
+   bit-exactly, and exports a Perfetto-loadable JSON.
+5. Train a (reduced) llama3.2-1b for 100 steps with the LM generalization.
 """
 import numpy as np
 import jax.numpy as jnp
@@ -39,7 +41,18 @@ assert np.allclose(out["square.o"], out2["square.o"], atol=1e-2)
 print("2-pod partition identical; cross-pod msgs:", stats2.cross_pod_msgs,
       "wire bytes:", stats2.cross_pod_wire_bytes)
 
-# --- 4. the LM generalization: train a reduced llama for 100 steps ----------
+# --- 4. observe a run: tracing is opt-in and proof-carrying ------------------
+from repro.telemetry import Tracer, chrome_trace, trace_stats
+
+tr = Tracer()                       # bounded ring buffer of structured events
+ex3 = NoCExecutor(g, topo, placement=placement, trace=tr)
+out3, stats3 = ex3.run(inputs)
+assert trace_stats(tr).as_dict() == stats3.as_dict()   # bit-exact round trip
+doc = chrome_trace(tr)              # load traceEvents in ui.perfetto.dev
+print("traced run:", len(tr), "events ->", len(doc["traceEvents"]),
+      "Perfetto events; trace aggregation reproduces NoCStats bit-exactly")
+
+# --- 5. the LM generalization: train a reduced llama for 100 steps ----------
 print("\ntraining reduced llama3.2-1b (same framework, LM substrate):")
 from repro.launch.train import run
 

@@ -125,7 +125,8 @@ def build_bmvm_graph(lut_np: np.ndarray, cfg: BMVMConfig) -> tuple[TaskGraph, li
 def iterate_noc_sim(lut: jax.Array, v_bits: np.ndarray, cfg: BMVMConfig, r: int,
                     topology: Optional[str] = None, n_nodes: Optional[int] = None,
                     placement="rr", mode: str = "sim",
-                    pods: Optional[list[int]] = None, serdes_cfg=None):
+                    pods: Optional[list[int]] = None, serdes_cfg=None,
+                    tracer=None):
     """(decoded vector, NoCStats) — the Table-V measurement path.
 
     ``placement``: 'rr' | 'greedy' | 'opt' (annealing search, cut-aware when
@@ -134,7 +135,8 @@ def iterate_noc_sim(lut: jax.Array, v_bits: np.ndarray, cfg: BMVMConfig, r: int,
     over a device mesh (needs n_nodes devices).  ``pods`` (node→pod) turns on
     partitioned execution: cut links run through quasi-SERDES bridge
     endpoints (``serdes_cfg``), results stay bit-identical and NoCStats gain
-    the ``bridge_*`` counters."""
+    the ``bridge_*`` counters.  ``tracer``: a `repro.telemetry.Tracer` to
+    record the run's event timeline (trace↔stats parity guaranteed)."""
     from ..core.serdes import QuasiSerdesConfig
 
     topo_name = topology or cfg.topology
@@ -146,7 +148,7 @@ def iterate_noc_sim(lut: jax.Array, v_bits: np.ndarray, cfg: BMVMConfig, r: int,
     plan = None
     if pods is not None:
         plan = cut(g, place, pods, serdes_cfg or QuasiSerdesConfig())
-    ex = NoCExecutor(g, topo, placement=place, plan=plan)
+    ex = NoCExecutor(g, topo, placement=place, plan=plan, trace=tracer)
     v1 = np.asarray(v_bits).reshape(-1)               # single vector (n,)
     vw = np.asarray(kref.gf2_pack_vector(jnp.asarray(v1), cfg.k), np.uint32)
     f = cfg.fold

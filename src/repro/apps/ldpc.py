@@ -147,7 +147,8 @@ def build_ldpc_graph(H: np.ndarray) -> tuple[TaskGraph, list[tuple[str, str]]]:
 def decode_on_noc(H: np.ndarray, llr: np.ndarray, n_iters: int,
                   topology: str = "mesh", n_nodes: int = 16,
                   pods: Optional[list[int]] = None,
-                  placement="rr", mode: str = "sim", serdes_cfg=None):
+                  placement="rr", mode: str = "sim", serdes_cfg=None,
+                  tracer=None):
     """Full paper flow: graph -> placement -> (optional 2-pod cut) -> sim.
 
     ``placement``: 'rr' | 'greedy' | 'opt' (annealing search, cut-aware when
@@ -158,7 +159,8 @@ def decode_on_noc(H: np.ndarray, llr: np.ndarray, n_iters: int,
     With ``pods`` the decode runs *partitioned*: cut links go through
     quasi-SERDES bridge endpoints (``serdes_cfg`` — framing/lanes of the
     inter-chip links), bit-identically to the unpartitioned run, and the
-    returned NoCStats carry the ``bridge_*`` counters."""
+    returned NoCStats carry the ``bridge_*`` counters.  ``tracer``: a
+    `repro.telemetry.Tracer` recording the decode's event timeline."""
     from ..core.serdes import QuasiSerdesConfig
 
     g, feedback = build_ldpc_graph(H)
@@ -168,7 +170,7 @@ def decode_on_noc(H: np.ndarray, llr: np.ndarray, n_iters: int,
     plan = None
     if pods is not None:
         plan = cut(g, placement, pods, serdes_cfg or QuasiSerdesConfig())
-    ex = NoCExecutor(g, topo, placement=placement, plan=plan)
+    ex = NoCExecutor(g, topo, placement=placement, plan=plan, trace=tracer)
     M, N = H.shape
     inputs = {}
     for b in range(N):

@@ -157,7 +157,8 @@ def build_pf_graph(cfg: PFConfig, n_pe: int) -> TaskGraph:
 def track_on_noc(frames: np.ndarray, cfg: PFConfig, n_pe: int = 4,
                  topology: str = "mesh", n_nodes: int = 8,
                  placement="rr", mode: str = "sim",
-                 pods: Optional[list[int]] = None, serdes_cfg=None):
+                 pods: Optional[list[int]] = None, serdes_cfg=None,
+                 tracer=None):
     """Paper-faithful NoC execution; returns (centers, total NoCStats).
 
     ``placement``: 'rr' | 'greedy' | 'opt' or an explicit PE→node mapping.
@@ -165,7 +166,8 @@ def track_on_noc(frames: np.ndarray, cfg: PFConfig, n_pe: int = 4,
     messages over a real device mesh (needs n_nodes devices).  ``pods``
     (node→pod) runs the tracker partitioned across chips: cut links go
     through quasi-SERDES bridges (``serdes_cfg``) with identical tracks and
-    ``bridge_*`` counters in the stats."""
+    ``bridge_*`` counters in the stats.  ``tracer``: a
+    `repro.telemetry.Tracer` recording all frames on one timeline."""
     from ..core.serdes import QuasiSerdesConfig
 
     g = build_pf_graph(cfg, n_pe)
@@ -175,7 +177,7 @@ def track_on_noc(frames: np.ndarray, cfg: PFConfig, n_pe: int = 4,
     plan = None
     if pods is not None:
         plan = cut(g, place, pods, serdes_cfg or QuasiSerdesConfig())
-    ex = NoCExecutor(g, topo, placement=place, plan=plan)
+    ex = NoCExecutor(g, topo, placement=place, plan=plan, trace=tracer)
     key = jax.random.key(cfg.seed)
     frames_j = jnp.asarray(frames)
     f0 = frames_j[0]

@@ -227,12 +227,20 @@ class _BridgeSim:
     ``peak_fifo`` and decides *where* the stalls land (spread through the
     schedule vs. one terminal drain)."""
 
-    def __init__(self, bprog: BridgedProgram):
+    def __init__(self, bprog: BridgedProgram, tracer=None):
         self.cfg = bprog.cfg
         self.keys = [(b.src, b.dst) for b in bprog.bridges]
         self.links = [dict(occ=0, pending=0, peak=0, words=0, beats=0, stalls=0)
                       for _ in bprog.bridges]
         self.stall_rounds = 0
+        # telemetry: one machine == one trace source, shared by the simulator
+        # and the analytic stats — which is why their event streams agree
+        self.tracer = tracer
+        self._t0 = tracer.clock if tracer is not None else 0
+        self._round = 0
+        if tracer is not None and self.links:
+            tracer.instant("bridge_cfg", "bridges", ts=self._t0,
+                           n=len(self.links), **self.cfg.serdes.trace_args())
 
     def words_for(self, nbytes: int) -> int:
         """Wire words one crossing of ``nbytes`` occupies: ceil to whole
@@ -248,36 +256,57 @@ class _BridgeSim:
         lk["pending"] += w
         lk["words"] += w
         lk["beats"] += w // s.lanes
+        if self.tracer is not None:
+            bs, bd = self.keys[bridge_idx]
+            self.tracer.instant("bridge_tx", f"bridge {bs}->{bd}",
+                                ts=self._t0 + self._round, words=w,
+                                beats=w // s.lanes,
+                                wire_bytes=w * s.beat_bytes)
 
-    def _admit_transmit(self, lk: dict) -> None:
+    def _admit_transmit(self, idx: int, lk: dict) -> None:
         take = min(lk["pending"], self.cfg.fifo_depth - lk["occ"])
         lk["occ"] += take
         lk["pending"] -= take
         lk["peak"] = max(lk["peak"], lk["occ"])
+        if self.tracer is not None:
+            # post-admit / pre-transmit: exactly the peak-update point, so
+            # the counter track's max IS bridge_peak_fifo
+            bs, bd = self.keys[idx]
+            self.tracer.counter("bridge_fifo", f"bridge {bs}->{bd}",
+                                lk["occ"], ts=self._t0 + self._round)
         lk["occ"] = max(0, lk["occ"] - self.cfg.serdes.lanes)
 
     def end_round(self) -> None:
         round_stall = 0
-        for lk in self.links:
-            self._admit_transmit(lk)
+        for idx, lk in enumerate(self.links):
+            self._admit_transmit(idx, lk)
             s = 0
             while lk["pending"]:
-                self._admit_transmit(lk)
+                self._admit_transmit(idx, lk)
                 s += 1
             lk["stalls"] += s
             round_stall = max(round_stall, s)
         self.stall_rounds += round_stall
+        if self.tracer is not None and round_stall:
+            self.tracer.instant("bridge_stall", "bridges",
+                                ts=self._t0 + self._round, rounds=round_stall)
+        self._round += 1
 
     def finish(self) -> BridgeStats:
         lanes = self.cfg.serdes.lanes
         beat_b = self.cfg.serdes.beat_bytes
         drain = 0
-        for lk in self.links:
+        for idx, lk in enumerate(self.links):
             s = -(-lk["occ"] // lanes)
             lk["stalls"] += s
+            while self.tracer is not None and lk["occ"] > 0:
+                self._admit_transmit(idx, lk)   # traced terminal drain
             lk["occ"] = 0
             drain = max(drain, s)
         self.stall_rounds += drain
+        if self.tracer is not None and drain:
+            self.tracer.instant("bridge_stall", "bridges",
+                                ts=self._t0 + self._round, rounds=drain)
         per = {k: dict(beats=lk["beats"], wire_bytes=lk["words"] * beat_b,
                        stall_rounds=lk["stalls"], peak_fifo=lk["peak"])
                for k, lk in zip(self.keys, self.links)}
@@ -290,11 +319,14 @@ class _BridgeSim:
             per_bridge=per)
 
 
-def bridge_program_stats(bprog: BridgedProgram, cube_nbytes: int) -> BridgeStats:
+def bridge_program_stats(bprog: BridgedProgram, cube_nbytes: int,
+                         tracer=None) -> BridgeStats:
     """Analytic BridgeStats for moving one ``cube_nbytes`` message cube
     through a bridged program — exactly what :func:`simulate_bridged_program`
-    counts (same arrival schedule, same FIFO machine, no data moved)."""
-    sim = _BridgeSim(bprog)
+    counts (same arrival schedule, same FIFO machine, no data moved).
+    ``tracer`` records the per-round ``bridge_tx``/``bridge_fifo``/
+    ``bridge_stall`` events of that shared machine."""
+    sim = _BridgeSim(bprog, tracer)
     for rnd in bprog.rounds:
         per = cube_nbytes // rnd.den
         for bidx in rnd.cross:
@@ -361,7 +393,7 @@ def _np_line_bridged(buf: np.ndarray, phase, phys, pod_of, bridge_of,
 
 
 def simulate_bridged_program(bprog: BridgedProgram, msgs: np.ndarray, *,
-                             batched: bool = False,
+                             batched: bool = False, tracer=None,
                              ) -> tuple[np.ndarray, ScheduleStats, BridgeStats]:
     """Round-by-round numpy execution of a partitioned program (no devices).
 
@@ -375,7 +407,8 @@ def simulate_bridged_program(bprog: BridgedProgram, msgs: np.ndarray, *,
     if batched:
         assert msgs.ndim >= 3, "batched msgs must be (B, n_src, n_dst, *c)"
         inner = np.ascontiguousarray(np.moveaxis(msgs, 0, 2))
-        delivered, stats, bstats = simulate_bridged_program(bprog, inner)
+        delivered, stats, bstats = simulate_bridged_program(bprog, inner,
+                                                            tracer=tracer)
         return (np.ascontiguousarray(np.moveaxis(delivered, 2, 0)), stats,
                 bstats)
     prog = bprog.prog
@@ -384,7 +417,7 @@ def simulate_bridged_program(bprog: BridgedProgram, msgs: np.ndarray, *,
     pod_of = bprog.pod_of_node
     bridge_of = {(b.src, b.dst): i for i, b in enumerate(bprog.bridges)}
     stats = ScheduleStats()
-    br = _BridgeSim(bprog)
+    br = _BridgeSim(bprog, tracer)
     raw = np.ascontiguousarray(msgs)
     byte = raw.view(np.uint8).reshape(n, n, -1)
     k = byte.shape[2]

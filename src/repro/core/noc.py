@@ -138,6 +138,36 @@ suite holds the verifier to its word: artifacts it passes must simulate to
 completion with stats inside the predicted bounds (see
 ``tests/test_analysis.py`` and the error-code reference in
 `repro.analysis`).
+
+Telemetry (``trace=``) — the observability contract
+---------------------------------------------------
+``NoCExecutor(trace=repro.telemetry.Tracer())`` (or ``trace=True``) threads
+an event tracer through every execution mode: per-wave
+scatter/route/gather/wave spans, one ``msg`` event per compiled message
+slot (with the cross-pod wire cost when the message crosses the cut),
+per-round ``round``/``link`` events derived from the compiled route program
+(exact — `routing.route_program_stats` counts what the simulators count),
+per-cycle ``cycle``/``queue`` events from the wormhole switch in
+``mode="buffered"``, and ``bridge_*`` events from the bridge FIFO machine
+shared by the bridged simulator and the analytic stats.  The full event
+schema lives in `repro.telemetry.tracer`; timestamps are logical NoC time
+(scatter 1 tick, route = rounds/cycles + bridge stalls, gather 1 tick).
+
+The contract, differential-tested across the topology × app × mode grid:
+``repro.telemetry.trace_stats(tracer)`` reproduces the run's `NoCStats`
+**bit-exactly** — the trace is a proof-carrying account of the run, not a
+best-effort log.  With ``trace=None`` (the default) no event object is
+allocated anywhere (every hook is one ``is not None`` check;
+property-tested), so tracing costs nothing when off.  Exporters:
+`repro.telemetry.chrome_trace` (Perfetto/Chrome timeline — one track per
+router/link/bridge, counter tracks for queue depth and link load),
+`repro.telemetry.heatmap` (text/CSV link utilization, also via
+``python -m repro.launch.report --trace``), and ``python -m
+repro.telemetry`` runs any case-study app traced.  Independent of tracing,
+every engine publishes its `NoCStats` into the process-wide metrics
+registry when one is enabled (`repro.telemetry.metrics.enable_metrics`) —
+flows as counters, high-water marks as max-gauges, labeled by
+``mode``/``topology``.
 """
 from __future__ import annotations
 
@@ -149,6 +179,8 @@ import numpy as np
 import jax
 
 from . import serdes as qserdes
+from ..telemetry.metrics import get_registry
+from ..telemetry.tracer import Tracer
 from .graph import GraphError, TaskGraph
 from .partition import PartitionPlan
 from .routing import simulate_schedule
@@ -324,12 +356,17 @@ class NoCExecutor:
                  placement: Optional[Mapping[str, int]] = None,
                  plan: Optional[PartitionPlan] = None,
                  cfg: Optional[NoCConfig] = None,
-                 verify: str = "strict"):
+                 verify: str = "strict",
+                 trace: Optional[Any] = None):
         from .partition import place_round_robin
 
         if verify not in ("strict", "warn", "off"):
             raise ValueError(f"verify must be 'strict', 'warn', or 'off', "
                              f"got {verify!r}")
+        # trace: None (off, zero overhead) | a telemetry Tracer | True for a
+        # default-capacity one.  Kept on self.tracer; shared across runs so
+        # run_iterative/run_batch build one continuous timeline.
+        self.tracer = Tracer() if trace is True else trace
         self.graph = graph
         self.topo = topo
         self.placement = dict(placement or (plan.placement if plan else place_round_robin(graph, topo)))
@@ -553,9 +590,49 @@ class NoCExecutor:
         if self._bridge_prog is not None:
             from .interchip import bridge_program_stats
 
-            bstats = bridge_program_stats(self._bridge_prog, msgs_arr.nbytes)
+            bstats = bridge_program_stats(self._bridge_prog, msgs_arr.nbytes,
+                                          tracer=self.tracer)
         return (np.ascontiguousarray(delivered),
                 route_program_stats(prog, msgs_arr.nbytes), bstats)
+
+    # -- telemetry -----------------------------------------------------------
+    def _trace_msgs(self, tr, prog: _WaveProgram, scale: int, t0: int) -> None:
+        """One ``msg`` event per compiled slot — the event-level mirror of
+        ``prog.static`` (payload/flit/cross-pod counters, scaled by the batch
+        via the ``n`` arg), which is what makes trace aggregation exact."""
+        cfg = self.cfg
+        pod_of = self.plan.pod_of_node if self.plan is not None else None
+        for slot in prog.slots:
+            s, d = self.placement[slot.src_pe], self.placement[slot.dst_pe]
+            args = dict(src=s, dst=d, bytes=slot.nbytes,
+                        flits=cfg.flits_for(slot.nbytes), n=scale)
+            if pod_of is not None and pod_of[s] != pod_of[d]:
+                args["wire_bytes"] = qserdes.link_bytes_on_wire(
+                    slot.shape, slot.dtype, cfg.serdes)
+                args["beats"] = cfg.serdes.lanes
+            tr.instant("msg", f"node {s}", ts=t0, **args)
+
+    def _trace_rounds(self, tr, t0: int, cube_nbytes: int) -> None:
+        """Per-round ``round`` instants + per-link ``link`` load counters for
+        the schedule transports, derived from the compiled route program —
+        `interchip._walk_rounds` traversals move ``cube_nbytes // den`` each,
+        summing to exactly `routing.route_program_stats` (== what the
+        simulators count), so the events are exact, not estimated."""
+        from .interchip import _walk_rounds
+
+        if self._route_prog is None:
+            from .routing import compile_routes
+
+            self._route_prog = compile_routes(self.topo)
+        for r, (den, pairs) in enumerate(_walk_rounds(self._route_prog)):
+            per = cube_nbytes // den
+            agg: dict[tuple[int, int], int] = {}
+            for p in pairs:
+                agg[p] = agg.get(p, 0) + per
+            tr.instant("round", "noc", ts=t0 + r,
+                       bytes=per * len(pairs), links=len(agg))
+            for (s, d), b in agg.items():
+                tr.counter("link", f"link {s}->{d}", b, ts=t0 + r)
 
     # -- packing -------------------------------------------------------------
     @staticmethod
@@ -642,7 +719,11 @@ class NoCExecutor:
         stats = NoCStats()
         if transport == "spmd":
             self._ensure_spmd()     # fail fast if the mesh can't be built
-        for wave, prog in zip(self.waves, self.programs):
+        tr = self.tracer
+        if tr is not None:
+            tr.instant("run", "noc", mode=transport,
+                       topology=type(topo).__name__, n_nodes=n, batch=scale)
+        for iw, (wave, prog) in enumerate(zip(self.waves, self.programs)):
             stats.waves += 1
             for name in wave:
                 pe = g.pes[name]
@@ -652,6 +733,9 @@ class NoCExecutor:
                 for p in pe.outputs:
                     mailbox[(name, p.name)] = np.asarray(results[p.name])
             if not prog.slots:
+                if tr is not None:   # message-free wave: scatter+gather only
+                    tr.span("wave", "noc", tr.clock, 2, wave=iw, msgs=0)
+                    tr.clock += 2
                 continue
             payload = np.empty(lead + (prog.payload_nbytes,), np.uint8)
             for slot in prog.slots:
@@ -660,6 +744,11 @@ class NoCExecutor:
             msgs_arr = np.zeros(lead + (n * n * prog.buf_bytes,), np.uint8)
             msgs_arr[..., prog.pack_idx] = payload
             cube = msgs_arr.reshape(lead + (n, n, prog.buf_bytes))
+            t0 = 0
+            if tr is not None:
+                t0 = tr.clock
+                self._trace_msgs(tr, prog, scale, t0)
+                tr.clock = t0 + 1   # transport events base at route start
             bstats = None
             if transport == "spmd":
                 delivered, sstats, bstats = self._route_spmd(cube, B)
@@ -669,7 +758,7 @@ class NoCExecutor:
 
                 delivered, swst = simulate_wormhole_cube(
                     topo, cube, self._switch_cfg(), pairs=prog.pairs,
-                    batched=B is not None)
+                    batched=B is not None, tracer=tr)
                 # mode-specific accounting: rounds are switch cycles (with
                 # contention), link_bytes are flit-hops on the wormhole routes
                 rounds = swst.cycles
@@ -681,14 +770,15 @@ class NoCExecutor:
                     from .interchip import bridge_program_stats
 
                     bstats = bridge_program_stats(self._ensure_bridge(),
-                                                  cube.nbytes)
+                                                  cube.nbytes, tracer=tr)
             elif self.plan is not None:
                 # partitioned execution: same schedule, but pod-crossing hops
                 # physically serialize through the bridge endpoints
                 from .interchip import simulate_bridged_program
 
                 delivered, sstats, bstats = simulate_bridged_program(
-                    self._ensure_bridge(), cube, batched=B is not None)
+                    self._ensure_bridge(), cube, batched=B is not None,
+                    tracer=tr)
                 rounds, link_bytes = sstats.rounds, sstats.link_bytes
             else:
                 delivered, sstats = simulate_schedule(topo, cube,
@@ -708,7 +798,26 @@ class NoCExecutor:
             stats.link_bytes += link_bytes
             if bstats is not None:
                 stats._roll_bridge(bstats)
+            if tr is not None:
+                durR = rounds + (bstats.stall_rounds
+                                 if bstats is not None else 0)
+                if transport in ("sim", "spmd"):
+                    # buffered emitted its own per-cycle events; the schedule
+                    # transports get the compiled program's exact rounds
+                    self._trace_rounds(tr, t0 + 1, cube.nbytes)
+                tr.span("scatter", "engine", t0, 1, msgs=len(prog.slots),
+                        bytes=scale * prog.payload_nbytes)
+                tr.span("route", "engine", t0 + 1, max(durR, 1),
+                        mode=transport)
+                tr.span("gather", "engine", t0 + 1 + durR, 1)
+                tr.span("wave", "noc", t0, durR + 2, wave=iw,
+                        msgs=len(prog.slots))
+                tr.clock = t0 + durR + 2
         outs = {f"{pe}.{port.name}": mailbox[(pe, port.name)] for pe, port in g.graph_outputs()}
+        reg = get_registry()
+        if reg is not None:
+            reg.record_noc_stats(stats, mode=transport,
+                                 topology=type(topo).__name__)
         return outs, stats
 
     # ------------------------------------------------------------------
@@ -728,7 +837,12 @@ class NoCExecutor:
         if self.plan is not None:
             pod_of = self.plan.pod_of_node
 
-        for wave in self.waves:
+        tr = self.tracer
+        if tr is not None:
+            tr.instant("run", "noc", mode="sim_python",
+                       topology=type(topo).__name__, n_nodes=topo.n_nodes,
+                       batch=1)
+        for iw, wave in enumerate(self.waves):
             stats.waves += 1
             # fire
             outbox: list[tuple[Any, int, int, str, str]] = []  # (val, src_node, dst_node, dst_pe, dst_port)
@@ -743,22 +857,37 @@ class NoCExecutor:
                     outbox.append((val, self.placement[c.src_pe], self.placement[c.dst_pe],
                                    c.dst_pe, c.dst_port))
             if not outbox:
+                if tr is not None:
+                    tr.span("wave", "noc", tr.clock, 2, wave=iw, msgs=0)
+                    tr.clock += 2
                 continue
             # frame messages into per-(src,dst) flit buffers and route them
             n = topo.n_nodes
+            t0 = tr.clock if tr is not None else 0
             per_pair: dict[tuple[int, int], list] = {}
             for val, s, d, dpe, dport in outbox:
                 per_pair.setdefault((s, d), []).append((val, dpe, dport))
                 stats.payload_bytes += val.nbytes
                 stats.flits += cfg.flits_for(val.nbytes)
+                margs = None
+                if tr is not None:
+                    margs = dict(src=s, dst=d, bytes=val.nbytes,
+                                 flits=cfg.flits_for(val.nbytes), n=1)
                 if pod_of is not None and pod_of[s] != pod_of[d]:
+                    wb = qserdes.link_bytes_on_wire(val.shape, val.dtype,
+                                                    cfg.serdes)
                     stats.cross_pod_msgs += 1
-                    stats.cross_pod_wire_bytes += qserdes.link_bytes_on_wire(
-                        val.shape, val.dtype, cfg.serdes)
+                    stats.cross_pod_wire_bytes += wb
                     stats.cross_pod_beats += cfg.serdes.lanes
+                    if margs is not None:
+                        margs["wire_bytes"] = wb
+                        margs["beats"] = cfg.serdes.lanes
+                if margs is not None:
+                    tr.instant("msg", f"node {s}", ts=t0, **margs)
             buf_bytes = max(
                 (sum(cfg.flit_framed_bytes(v.nbytes) for v, _, _ in msgs)
                  for msgs in per_pair.values()), default=0)
+            durR = 0
             if buf_bytes:
                 msgs_arr = np.zeros((n, n, buf_bytes), np.uint8)
                 for (s, d), msgs in per_pair.items():
@@ -767,23 +896,44 @@ class NoCExecutor:
                         raw = v.tobytes()
                         msgs_arr[s, d, off:off + len(raw)] = np.frombuffer(raw, np.uint8)
                         off += cfg.flit_framed_bytes(v.nbytes)  # flit padding
+                if tr is not None:
+                    tr.clock = t0 + 1
                 delivered, sstats = simulate_schedule(topo, msgs_arr)
                 stats.rounds += sstats.rounds
                 stats.link_bytes += sstats.link_bytes
+                durR = sstats.rounds
+                bstats = None
                 if pod_of is not None:
                     # seed-loop bridge accounting: the analytic stats are
                     # exact (== the bridged simulator), so the baseline stays
                     # field-for-field comparable with the compiled engine
                     from .interchip import bridge_program_stats
-                    stats._roll_bridge(bridge_program_stats(
-                        self._ensure_bridge(), msgs_arr.nbytes))
+                    bstats = bridge_program_stats(
+                        self._ensure_bridge(), msgs_arr.nbytes, tracer=tr)
+                    stats._roll_bridge(bstats)
+                    durR += bstats.stall_rounds
+                if tr is not None:
+                    self._trace_rounds(tr, t0 + 1, msgs_arr.nbytes)
                 for (s, d), msgs in per_pair.items():
                     off = 0
                     for v, dpe, dport in msgs:
                         raw = delivered[d, s, off:off + v.nbytes].tobytes()
                         mailbox[(dpe, dport)] = np.frombuffer(raw, v.dtype).reshape(v.shape).copy()
                         off += cfg.flit_framed_bytes(v.nbytes)
+            if tr is not None:
+                tr.span("scatter", "engine", t0, 1, msgs=len(outbox),
+                        bytes=sum(v.nbytes for v, *_ in outbox))
+                tr.span("route", "engine", t0 + 1, max(durR, 1),
+                        mode="sim_python")
+                tr.span("gather", "engine", t0 + 1 + durR, 1)
+                tr.span("wave", "noc", t0, durR + 2, wave=iw,
+                        msgs=len(outbox))
+                tr.clock = t0 + durR + 2
         outs = {f"{pe}.{port.name}": mailbox[(pe, port.name)] for pe, port in g.graph_outputs()}
+        reg = get_registry()
+        if reg is not None:
+            reg.record_noc_stats(stats, mode="sim_python",
+                                 topology=type(topo).__name__)
         return outs, stats
 
     def run_iterative(self, inputs: Mapping[str, Any], feedback, n_iters: int,

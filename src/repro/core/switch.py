@@ -114,11 +114,18 @@ class SwitchStats:
 
     @property
     def avg_latency(self) -> float:
-        return self.latency_sum / max(self.packets, 1)
+        """Mean packet latency in cycles; 0.0 when nothing was delivered
+        (a zero-packet workload must not divide by zero)."""
+        if self.packets == 0:
+            return 0.0
+        return self.latency_sum / self.packets
 
     def throughput(self, n_nodes: int) -> float:
-        """Accepted load over the whole run, flits/cycle/node."""
-        return self.flits / max(self.cycles, 1) / n_nodes
+        """Accepted load over the whole run, flits/cycle/node; 0.0 for an
+        empty run (zero cycles) or a degenerate node count."""
+        if self.cycles <= 0 or n_nodes <= 0:
+            return 0.0
+        return self.flits / self.cycles / n_nodes
 
 
 @dataclasses.dataclass
@@ -194,7 +201,8 @@ def dor_route(topo: Topology, src: int, dst: int,
 def simulate_switch(topo: Topology, packets: Sequence[Packet],
                     cfg: Optional[SwitchConfig] = None,
                     record_ejections: bool = False,
-                    verify: bool = True) -> SwitchResult:
+                    verify: bool = True,
+                    tracer=None) -> SwitchResult:
     """Cycle-accurate wormhole simulation of ``packets`` over ``topo``.
 
     Per cycle: every occupied input (port, VC) FIFO head requests its packet's
@@ -210,7 +218,15 @@ def simulate_switch(topo: Topology, packets: Sequence[Packet],
     function (`repro.analysis.cdg`); cyclic combinations are rejected up
     front with the concrete channel cycle.  ``verify=False`` skips the proof
     and lets doomed configurations run into the runtime `DeadlockError` —
-    used by the verifier benchmarks and deadlock tests."""
+    used by the verifier benchmarks and deadlock tests.
+
+    ``tracer`` (a `repro.telemetry.Tracer`, optional) records one ``cycle``
+    event per executed cycle (flit moves, link bytes, stall/arbitration
+    deltas, ejections) plus ``queue`` occupancy counters, ``idle_ff``
+    fast-forward markers and a ``deadlock`` instant before the error is
+    raised; ``tracer.detail == "flits"`` adds one event per flit move.
+    Timestamps are ``tracer.clock + cycle``, so the caller positions the run
+    on its timeline.  ``tracer=None`` adds no work to the loop."""
     cfg = cfg or SwitchConfig()
     n = topo.n_nodes
     depth = cfg.buffer_depth
@@ -270,6 +286,9 @@ def simulate_switch(topo: Topology, packets: Sequence[Packet],
     order = sorted(range(P), key=lambda i: (packets[i].t_inject, i))
     inj_ptr = 0
     stats = SwitchStats()
+    base = tracer.clock if tracer is not None else 0
+    flit_detail = tracer is not None and tracer.detail == "flits"
+    t_stall0 = t_arb0 = t_ej0 = cyc_q = 0
     completions = np.full(P, -1, np.int64)
     ejected = np.zeros(P, np.int64)      # flits ejected so far, per packet
     ej_log: Optional[list] = [] if record_ejections else None
@@ -285,6 +304,10 @@ def simulate_switch(topo: Topology, packets: Sequence[Packet],
                 (pid, f) for f in range(packets[pid].n_flits))
             inj_ptr += 1
             injected = True
+        if tracer is not None:   # start-of-cycle baselines for event deltas
+            t_stall0, t_arb0, t_ej0 = (stats.stall_cycles, stats.arb_losses,
+                                       stats.flits)
+            cyc_q = 0
         # ---- gather requests: head flit of every occupied input slot ------
         reqs: dict[tuple[int, int], list] = {}
         for u in range(n):
@@ -358,9 +381,18 @@ def simulate_switch(topo: Topology, packets: Sequence[Packet],
                 link_moves += 1
                 stats.link_flits += 1
                 stats.max_queue = max(stats.max_queue, len(dq))
+                if tracer is not None:
+                    if len(dq) > cyc_q:
+                        cyc_q = len(dq)
+                    if flit_detail:
+                        tracer.instant("flit", f"router {u}", ts=base + c,
+                                       pid=pid, f=fidx, vc=vc, to=okey)
         stats.peak_link_flits = max(stats.peak_link_flits, link_moves)
         if not moves and not injected:
             if inj_ptr < P:   # idle gap: fast-forward to the next injection
+                if tracer is not None:
+                    tracer.instant("idle_ff", "switch", ts=base + c,
+                                   to=packets[order[inj_ptr]].t_inject)
                 c = packets[order[inj_ptr]].t_inject
                 continue
             from ..analysis.cdg import find_wait_cycle
@@ -387,9 +419,21 @@ def simulate_switch(topo: Topology, packets: Sequence[Packet],
                     f"vc{vc}]" for r, up, vc in wcyc)
                 culprit = (f"; culprit wait cycle across {len(wcyc)} "
                            f"router input(s): {hops} -> back to start")
+            if tracer is not None:
+                tracer.instant("deadlock", "switch", ts=base + c,
+                               wedged=len(stuck),
+                               wait_cycle=len(wcyc) if wcyc else 0)
             raise DeadlockError(
                 f"cycle {c}: no flit can move, {len(stuck)} packets wedged "
                 f"(first few: {stuck[:4]}) — cyclic buffer wait{culprit}")
+        if tracer is not None:
+            tracer.instant("cycle", "switch", ts=base + c, c=c,
+                           moves=link_moves, bytes=link_moves * fb,
+                           stalls=stats.stall_cycles - t_stall0,
+                           arb=stats.arb_losses - t_arb0,
+                           ejects=stats.flits - t_ej0)
+            if cyc_q:
+                tracer.counter("queue", "switch queue", cyc_q, ts=base + c)
         c += 1
     stats.cycles = c
     assert int(ejected.sum()) == sum(p.n_flits for p in packets)
@@ -491,7 +535,7 @@ def simulate_wormhole_cube(topo: Topology, msgs: np.ndarray,
                            cfg: Optional[SwitchConfig] = None,
                            pairs: Optional[Sequence[tuple[int, int, int]]] = None,
                            batched: bool = False,
-                           ) -> tuple[np.ndarray, SwitchStats]:
+                           tracer=None) -> tuple[np.ndarray, SwitchStats]:
     """Move one ``(n, n, buf_bytes)`` message cube through the buffered
     wormhole switch: same ``(delivered, stats)`` contract as
     :func:`routing.simulate_schedule` (``delivered[d, s] == msgs[s, d]``).
@@ -512,7 +556,8 @@ def simulate_wormhole_cube(topo: Topology, msgs: np.ndarray,
     if batched:
         assert msgs.ndim >= 3, "batched msgs must be (B, n_src, n_dst, *c)"
         inner = np.ascontiguousarray(np.moveaxis(msgs, 0, 2))   # (n, n, B, buf)
-        delivered, stats = simulate_wormhole_cube(topo, inner, cfg, pairs=pairs)
+        delivered, stats = simulate_wormhole_cube(topo, inner, cfg, pairs=pairs,
+                                                  tracer=tracer)
         return np.ascontiguousarray(np.moveaxis(delivered, 2, 0)), stats
     n = topo.n_nodes
     assert msgs.shape[0] == n and msgs.shape[1] == n
@@ -529,7 +574,7 @@ def simulate_wormhole_cube(topo: Topology, msgs: np.ndarray,
         packets.append(Packet(s, d, max(1, -(-raw.size // cfg.flit_bytes)),
                               t_inject=0, payload=raw))
         meta.append((s, d, nb, raw.size))
-    res = simulate_switch(topo, packets, cfg)
+    res = simulate_switch(topo, packets, cfg, tracer=tracer)
     delivered = np.zeros_like(msgs)
     for pid, (s, d, nb, size) in enumerate(meta):
         got = res.payloads[pid][:size]

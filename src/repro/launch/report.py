@@ -1,6 +1,11 @@
 """Post-process dry-run JSONs into the EXPERIMENTS.md roofline table.
 
     PYTHONPATH=src python -m repro.launch.report results/dryrun [--md]
+    PYTHONPATH=src python -m repro.launch.report --trace trace.json [--csv]
+
+``--trace`` renders the link-utilization heatmap of a recorded Perfetto/
+Chrome trace (see ``python -m repro.telemetry``) instead of the roofline
+table — the NoC-side communication report next to the TPU-side one.
 
 Adds the algorithm-ideal terms the raw records can't know:
   ideal_compute_s = MODEL_FLOPS/chips / peak
@@ -70,9 +75,23 @@ def enrich(rec: dict) -> dict:
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("dir")
+    ap.add_argument("dir", nargs="?", default=None,
+                    help="dry-run results directory (roofline table)")
     ap.add_argument("--md", action="store_true")
+    ap.add_argument("--trace", default=None, metavar="TRACE_JSON",
+                    help="render the link-utilization heatmap of a "
+                         "telemetry trace instead of the roofline table")
+    ap.add_argument("--csv", action="store_true",
+                    help="with --trace: CSV rows instead of the matrix")
     args = ap.parse_args()
+    if args.trace is not None:
+        from ..telemetry import heatmap, link_utilization
+        with open(args.trace) as fh:
+            doc = json.load(fh)
+        print(heatmap(link_utilization(doc), csv=args.csv))
+        return
+    if args.dir is None:
+        ap.error("either a results dir or --trace is required")
     rows = []
     for f in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
         rec = enrich(json.load(open(f)))

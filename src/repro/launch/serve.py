@@ -6,6 +6,11 @@
 Implements the batched serving loop the decode shapes lower: requests are
 grouped into fixed-size batches, each batch is prefilled once, then decoded
 token-by-token with a shared ring cache (greedy sampling).
+
+``--metrics PATH`` turns on the telemetry metrics registry: prefill and
+per-token decode wall-clock land in the ``serve.prefill.seconds`` /
+``serve.decode.seconds`` histograms; the JSON snapshot (with p50/p99/p99.9)
+is written to PATH ('-' = stdout).
 """
 from __future__ import annotations
 
@@ -23,7 +28,12 @@ from ..models.layers import init_params
 from .mesh import make_host_mesh, set_mesh
 
 
-def serve_batch(params, cfg, prompts: np.ndarray, gen: int, mesh) -> np.ndarray:
+def serve_batch(params, cfg, prompts: np.ndarray, gen: int, mesh,
+                reg=None) -> np.ndarray:
+    """One batch: prefill once, decode token-by-token.  ``reg``: an optional
+    telemetry MetricsRegistry — per-phase wall clock is observed into the
+    ``serve.prefill.seconds`` / ``serve.decode.seconds`` histograms (each
+    sample is synced via the host round-trip, so it bounds real latency)."""
     B, S = prompts.shape
     with set_mesh(mesh):
         cache = T.init_cache(cfg, B, S + gen)
@@ -34,13 +44,21 @@ def serve_batch(params, cfg, prompts: np.ndarray, gen: int, mesh) -> np.ndarray:
             batch["patches"] = jnp.zeros((B, cfg.n_patches, cfg.d_frontend), cfg.cdtype)
         prefill = jax.jit(lambda p, b, c: T.prefill(p, b, cfg, c))
         decode = jax.jit(lambda p, b, c: T.decode_step(p, b, cfg, c))
+        ts = time.perf_counter()
         logits, cache = prefill(params, batch, cache)
         tok = jnp.argmax(logits[:, -1], -1)
         out = [np.asarray(tok)]
+        if reg is not None:
+            reg.histogram("serve.prefill.seconds").observe(
+                time.perf_counter() - ts)
         for _ in range(gen - 1):
+            ts = time.perf_counter()
             logits, cache = decode(params, {"tokens": tok[:, None]}, cache)
             tok = jnp.argmax(logits, -1)
             out.append(np.asarray(tok))
+            if reg is not None:
+                reg.histogram("serve.decode.seconds").observe(
+                    time.perf_counter() - ts)
     return np.stack(out, 1)
 
 
@@ -54,8 +72,15 @@ def run(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="enable the telemetry metrics registry; write the "
+                         "JSON snapshot here ('-' prints to stdout)")
     args = ap.parse_args(argv)
 
+    reg = None
+    if args.metrics:
+        from ..telemetry.metrics import enable_metrics
+        reg = enable_metrics()
     cfg = get_config(args.arch, smoke=args.smoke)
     mesh = make_host_mesh(model=args.model_parallel)
     params = init_params(T.abstract_params(cfg), jax.random.key(args.seed))
@@ -67,13 +92,28 @@ def run(argv=None):
     while done < args.requests:
         n = min(args.batch, args.requests - done)
         prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32)
-        out = serve_batch(params, cfg, prompts, args.gen, mesh)
+        out = serve_batch(params, cfg, prompts, args.gen, mesh, reg=reg)
         all_out.append(out[:n])
         done += n
         print(f"served {done}/{args.requests} requests "
               f"(batch decode tok/s so far: {done * args.gen / (time.monotonic() - t0):,.1f})")
     dt = time.monotonic() - t0
     print(f"done: {args.requests} requests × {args.gen} tokens in {dt:.1f}s")
+    if reg is not None:
+        import json as _json
+
+        from ..telemetry.metrics import disable_metrics
+        d = reg.histogram("serve.decode.seconds")
+        print(f"decode/token: p50 {d.p50 * 1e3:.1f}ms  "
+              f"p99 {d.p99 * 1e3:.1f}ms  p99.9 {d.p999 * 1e3:.1f}ms")
+        snap = _json.dumps(reg.snapshot(), indent=1, sort_keys=True)
+        if args.metrics == "-":
+            print(snap)
+        else:
+            with open(args.metrics, "w") as fh:
+                fh.write(snap + "\n")
+            print(f"metrics snapshot -> {args.metrics}")
+        disable_metrics()
     return np.concatenate(all_out)
 
 

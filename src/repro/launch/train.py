@@ -7,6 +7,11 @@ Runs on whatever devices the host has (CPU smoke / TPU slice), with the full
 substrate engaged: sharded deterministic data pipeline, AdamW + cosine
 schedule, remat, checkpoint/restart via the resilient runner, cross-pod
 serdes gradient sync when the mesh has a pod axis.
+
+``--metrics PATH`` turns on the telemetry metrics registry: wall-clock step
+times land in the ``train.step.seconds`` histogram (p50/p99/p99.9 printed at
+the end) and the per-step MoE NoC metrics publish under the shared
+``noc.moe.*`` names; the JSON snapshot is written to PATH ('-' = stdout).
 """
 from __future__ import annotations
 
@@ -55,7 +60,15 @@ def run(argv=None):
     ap.add_argument("--pod-sync", default="auto", choices=["auto", "serdes"])
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="enable the telemetry metrics registry; write the "
+                         "JSON snapshot here ('-' prints to stdout)")
     args = ap.parse_args(argv)
+
+    reg = None
+    if args.metrics:
+        from ..telemetry.metrics import enable_metrics
+        reg = enable_metrics()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     mesh = make_host_mesh(model=args.model_parallel)
@@ -84,8 +97,14 @@ def run(argv=None):
             if cfg.family == "vlm":
                 jb["patches"] = jnp.zeros((args.batch, cfg.n_patches, cfg.d_frontend),
                                           cfg.cdtype)
+            ts = time.perf_counter()
             state, mets = jitted(state, jb)
-            losses.append(float(mets["loss"]))
+            loss = float(mets["loss"])   # blocks on the step's results
+            if reg is not None:
+                reg.histogram("train.step.seconds").observe(
+                    time.perf_counter() - ts)
+                reg.record_step_metrics(mets)
+            losses.append(loss)
             n = len(losses)
             if n % args.log_every == 0 or n == 1:
                 print(f"step {n:5d}  loss {losses[-1]:.4f}  "
@@ -112,6 +131,21 @@ def run(argv=None):
     tok_s = args.steps * args.batch * args.seq / dt
     print(f"done: {args.steps} steps in {dt:.1f}s ({tok_s:,.0f} tok/s); "
           f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    if reg is not None:
+        import json as _json
+
+        from ..telemetry.metrics import disable_metrics
+        h = reg.histogram("train.step.seconds")
+        print(f"step time: p50 {h.p50 * 1e3:.1f}ms  p99 {h.p99 * 1e3:.1f}ms  "
+              f"p99.9 {h.p999 * 1e3:.1f}ms")
+        snap = _json.dumps(reg.snapshot(), indent=1, sort_keys=True)
+        if args.metrics == "-":
+            print(snap)
+        else:
+            with open(args.metrics, "w") as fh:
+                fh.write(snap + "\n")
+            print(f"metrics snapshot -> {args.metrics}")
+        disable_metrics()
     return losses
 
 

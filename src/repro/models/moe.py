@@ -96,6 +96,18 @@ class MoEDispatchStats:
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
 
+    def publish(self, registry=None) -> None:
+        """Publish into the telemetry metrics registry under the canonical
+        ``noc.moe.*`` names (`repro.telemetry.MOE_METRIC_NAMES`) — the same
+        names the train loop's step metrics land on, so transformer metrics
+        and NoC dispatch stats share one schema.  No-op when metrics are off
+        or fields still hold traced values (publish host-side)."""
+        if registry is None:
+            from ..telemetry.metrics import get_registry
+            registry = get_registry()
+        if registry is not None:
+            registry.record_moe_stats(self)
+
 
 def moe_specs(c: MoEConfig, dtype=jnp.float32) -> dict:
     E, d, f = c.n_experts, c.d_model, c.d_ff

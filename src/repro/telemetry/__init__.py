@@ -1,0 +1,52 @@
+"""Opt-in observability for the NoC engines: tracing, export, metrics.
+
+Three pieces, one contract:
+
+* `tracer` — :class:`Tracer` (bounded ring buffer of structured events; see
+  its module docstring for the full event schema) threaded through every
+  engine via ``NoCExecutor(trace=...)`` / ``simulate_switch(tracer=...)`` /
+  the app entry points' ``tracer=`` kwarg, and :func:`trace_stats`, which
+  folds a complete trace back into the run's `NoCStats` **bit-exactly**.
+* `export` — :func:`chrome_trace` (Perfetto/Chrome trace-event JSON, one
+  track per router/link/bridge with counter tracks for queue depth and link
+  load), :func:`validate_chrome_trace`, and the :func:`link_utilization` /
+  :func:`heatmap` text/CSV reports (``launch/report.py --trace``).
+* `metrics` — process-wide :class:`MetricsRegistry`
+  (counter/gauge/log-bucketed histogram with p50/p99/p99.9, JSON snapshot +
+  Prometheus text) that the engines, MoE dispatch and the train/serve loops
+  all publish into under one ``noc.*`` naming scheme.
+
+Everything is off by default and free when off: a disabled tracer is a
+single ``is not None`` check in the engines (property-tested: zero events
+allocated), a disabled registry a single ``get_registry() is None`` check.
+
+``python -m repro.telemetry`` runs any case-study app traced and dumps the
+Perfetto trace plus the link report.
+"""
+from .export import (chrome_trace, heatmap, link_utilization,
+                     validate_chrome_trace, write_chrome_trace)
+from .metrics import (MOE_METRIC_NAMES, STEP_METRIC_NAMES, Counter, Gauge,
+                      Histogram, MetricsRegistry, disable_metrics,
+                      enable_metrics, get_registry)
+from .tracer import TraceEvent, Tracer, events_allocated, trace_stats
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MOE_METRIC_NAMES",
+    "MetricsRegistry",
+    "STEP_METRIC_NAMES",
+    "TraceEvent",
+    "Tracer",
+    "chrome_trace",
+    "disable_metrics",
+    "enable_metrics",
+    "events_allocated",
+    "get_registry",
+    "heatmap",
+    "link_utilization",
+    "trace_stats",
+    "validate_chrome_trace",
+    "write_chrome_trace",
+]

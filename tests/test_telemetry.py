@@ -1,0 +1,385 @@
+"""Telemetry subsystem: the trace↔stats parity contract (aggregating a full
+trace reproduces the engine's NoCStats bit-exactly across the topology × app
+× mode grid), zero overhead when tracing is off, exporter schema validity,
+and the unified metrics registry naming shared by NoC engines and MoE."""
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.telemetry import (MOE_METRIC_NAMES, STEP_METRIC_NAMES,
+                             MetricsRegistry, Tracer, chrome_trace,
+                             disable_metrics, enable_metrics,
+                             events_allocated, get_registry, heatmap,
+                             link_utilization, trace_stats,
+                             validate_chrome_trace, write_chrome_trace)
+
+TOPOLOGIES = ["ring", "mesh", "torus", "fattree"]
+
+
+def _pods(n):
+    return [0] * (n // 2) + [1] * (n - n // 2)
+
+
+def _run_bmvm(topology, mode, pods, tracer):
+    from repro.apps import bmvm
+
+    rng = np.random.default_rng(0)
+    cfg = bmvm.BMVMConfig(n=64, k=8, fold=2)
+    A = rng.integers(0, 2, (64, 64)).astype(np.uint8)
+    v = rng.integers(0, 2, (64,)).astype(np.uint8)
+    lut = bmvm.preprocess(A, cfg)
+    _, stats = bmvm.iterate_noc_sim(lut, v, cfg, 2, topology=topology,
+                                    mode=mode, pods=pods, tracer=tracer)
+    return stats
+
+
+def _run_ldpc(topology, mode, pods, tracer):
+    from repro.apps import ldpc
+
+    rng = np.random.default_rng(0)
+    H = ldpc.fano_plane_H()
+    llr = ldpc.awgn_llr(np.zeros(7, np.int8), 4.0, rng)
+    _, _, stats = ldpc.decode_on_noc(H, llr, 2, topology=topology,
+                                     n_nodes=16, mode=mode, pods=pods,
+                                     tracer=tracer)
+    return stats
+
+
+def _run_pf(topology, mode, pods, tracer):
+    from repro.apps import particle_filter as pf
+
+    rng = np.random.default_rng(0)
+    cfg = pf.PFConfig(img=48, roi=12, n_particles=32, n_bins=12)
+    frames, _ = pf.synth_video(cfg, 3, rng)
+    _, stats = pf.track_on_noc(frames, cfg, n_pe=4, topology=topology,
+                               n_nodes=8, mode=mode, pods=pods, tracer=tracer)
+    return stats
+
+
+APPS = {"bmvm": (_run_bmvm, 8), "ldpc": (_run_ldpc, 16), "pf": (_run_pf, 8)}
+
+
+# ---------------------------------------------------------------------------
+# the keystone contract: trace aggregation == engine stats, bit-exact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topology", TOPOLOGIES)
+@pytest.mark.parametrize("app", list(APPS))
+@pytest.mark.parametrize("variant", ["sim", "buffered", "bridged"])
+def test_trace_stats_parity_grid(topology, app, variant):
+    run, n_nodes = APPS[app]
+    mode = "buffered" if variant == "buffered" else "sim"
+    pods = _pods(n_nodes) if variant == "bridged" else None
+    tr = Tracer()
+    stats = run(topology, mode, pods, tr)
+    assert tr.dropped == 0
+    agg = trace_stats(tr)
+    # bit-exact: every field, including the high-water marks
+    assert agg.as_dict() == stats.as_dict()
+    if variant == "bridged":
+        assert stats.cross_pod_msgs > 0          # the grid cell is non-vacuous
+    if variant == "buffered":
+        assert stats.switch_cycles > 0
+
+
+def test_parity_sim_python():
+    tr = Tracer()
+    stats = _run_bmvm("mesh", "sim_python", None, tr)
+    assert trace_stats(tr).as_dict() == stats.as_dict()
+    tr2 = Tracer()
+    stats2 = _run_bmvm("mesh", "sim_python", _pods(8), tr2)
+    assert trace_stats(tr2).as_dict() == stats2.as_dict()
+    assert stats2.bridge_peak_fifo > 0           # high-water mark exercised
+
+
+def test_parity_high_water_marks_buffered_bridged():
+    """Peak counters (max-merge fields) survive the round trip too."""
+    tr = Tracer()
+    stats = _run_ldpc("mesh", "buffered", _pods(16), tr)
+    agg = trace_stats(tr)
+    assert stats.switch_max_queue > 0
+    assert agg.switch_max_queue == stats.switch_max_queue
+    assert agg.bridge_peak_fifo == stats.bridge_peak_fifo
+    assert agg.switch_peak_link_flits == stats.switch_peak_link_flits
+
+
+# ---------------------------------------------------------------------------
+# zero overhead when off
+# ---------------------------------------------------------------------------
+
+def _bmvm_executor(trace=None):
+    from repro.apps import bmvm
+    from repro.core import NoCExecutor, make_topology
+    from repro.kernels import ref as kref
+
+    rng = np.random.default_rng(0)
+    cfg = bmvm.BMVMConfig(n=64, k=8, fold=2)
+    A = rng.integers(0, 2, (64, 64)).astype(np.uint8)
+    v = rng.integers(0, 2, (64,)).astype(np.uint8)
+    lut = np.asarray(bmvm.preprocess(A, cfg))
+    g, feedback = bmvm.build_bmvm_graph(lut, cfg)
+    vw = np.asarray(kref.gf2_pack_vector(jnp.asarray(v), cfg.k), np.uint32)
+    f = cfg.fold
+    inputs = {f"lut{i}.v": vw[i * f:(i + 1) * f] for i in range(cfg.n_pe)}
+    ex = NoCExecutor(g, make_topology("mesh", 2 * cfg.n_pe), trace=trace)
+    return ex, inputs, feedback
+
+
+def test_tracing_disabled_allocates_nothing():
+    ex, inputs, feedback = _bmvm_executor()
+    assert ex.tracer is None                     # default is off
+    ex.run_iterative(inputs, feedback, 1, mode="sim")   # warmup/compile
+    before = events_allocated()
+    ex.run_iterative(inputs, feedback, 3, mode="sim")
+    ex.run_iterative(inputs, feedback, 2, mode="buffered")
+    ex.run_iterative(inputs, feedback, 2, mode="sim_python")
+    assert events_allocated() == before
+
+
+def test_tracing_disabled_timing_stable():
+    """The off path is one pointer check per hook: two untraced runs of the
+    table4 iteration agree to 3% (min-of-4, amortized over 10 iters)."""
+    ex, inputs, feedback = _bmvm_executor()
+    ex.run_iterative(inputs, feedback, 2, mode="sim")   # warmup/compile
+
+    def once():
+        t0 = time.perf_counter()
+        ex.run_iterative(inputs, feedback, 10, mode="sim")
+        return time.perf_counter() - t0
+
+    a = min(once() for _ in range(4))
+    b = min(once() for _ in range(4))
+    assert abs(a - b) <= 0.03 * max(a, b) + 1e-4
+
+
+def test_tracer_true_constructs_fresh():
+    ex, inputs, feedback = _bmvm_executor(trace=True)
+    assert isinstance(ex.tracer, Tracer)
+    ex.run_iterative(inputs, feedback, 1, mode="sim")
+    assert len(ex.tracer) > 0
+
+
+# ---------------------------------------------------------------------------
+# ring buffer bound
+# ---------------------------------------------------------------------------
+
+def test_ring_buffer_bounded_and_strict():
+    tr = Tracer(capacity=16)
+    for i in range(100):
+        tr.instant("msg", "node 0", ts=i, src=0, dst=1, bytes=4, flits=1, n=1)
+    assert len(tr) == 16
+    assert tr.emitted == 100
+    assert tr.dropped == 84
+    with pytest.raises(ValueError, match="dropped"):
+        trace_stats(tr)
+    # non-strict aggregation still folds what survived
+    st = trace_stats(tr, strict=False)
+    assert st.payload_bytes == 16 * 4
+
+
+def test_tracer_rejects_bad_args():
+    with pytest.raises(ValueError):
+        Tracer(capacity=0)
+    with pytest.raises(ValueError):
+        Tracer(detail="everything")
+
+
+# ---------------------------------------------------------------------------
+# SwitchStats guards (satellite a)
+# ---------------------------------------------------------------------------
+
+def test_switch_stats_zero_delivered_guards():
+    from repro.core.switch import SwitchStats, simulate_switch
+    from repro.core.topology import make_topology
+
+    st = SwitchStats()
+    assert st.avg_latency == 0.0
+    assert st.throughput(16) == 0.0
+    st.cycles = 10
+    assert st.throughput(0) == 0.0
+    # a run with no packets delivers nothing and divides by nothing
+    res = simulate_switch(make_topology("mesh", 16), [])
+    assert res.stats.packets == 0
+    assert res.stats.cycles == 0
+    assert res.stats.avg_latency == 0.0
+    assert res.stats.throughput(16) == 0.0
+
+
+def test_switch_deadlock_event():
+    from repro.core.switch import (DeadlockError, Packet, SwitchConfig,
+                                   simulate_switch)
+    from repro.core.topology import make_topology
+
+    topo = make_topology("ring", 8)
+    pkts = [Packet(s, (s + 4) % 8, 4, t_inject=0) for s in range(8)]
+    tr = Tracer()
+    with pytest.raises(DeadlockError):
+        simulate_switch(topo, pkts,
+                        SwitchConfig(buffer_depth=1, n_vcs=1,
+                                     max_cycles=20_000),
+                        verify=False, tracer=tr)
+    names = [ev.name for ev in tr.events()]
+    assert "deadlock" in names
+    ev = next(e for e in tr.events() if e.name == "deadlock")
+    assert ev.args["wedged"] > 0
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_schema_roundtrip(tmp_path):
+    tr = Tracer()
+    stats = _run_bmvm("mesh", "sim", None, tr)
+    doc = chrome_trace(tr)
+    n = validate_chrome_trace(doc)
+    assert n == len(doc["traceEvents"])
+    path = tmp_path / "trace.json"
+    write_chrome_trace(str(path), tr)
+    loaded = json.loads(path.read_text())
+    assert validate_chrome_trace(loaded) == n
+    # link utilization is recoverable from the exported JSON alone and
+    # matches both the in-memory trace and the engine's own counter
+    util_t = link_utilization(tr)
+    util_j = link_utilization(loaded)
+    assert util_t == util_j
+    assert sum(util_t.values()) == stats.link_bytes
+    txt = heatmap(util_t)
+    assert "total bytes" in txt and str(stats.link_bytes) in txt
+    rows = heatmap(util_t, csv=True).splitlines()
+    assert rows[0] == "src,dst,bytes"
+    assert sum(int(r.split(",")[2]) for r in rows[1:]) == stats.link_bytes
+
+
+def test_chrome_trace_tamper_rejected():
+    tr = Tracer()
+    tr.span("wave", "noc", 0, 2, wave=0)
+    doc = chrome_trace(tr)
+    assert validate_chrome_trace(doc) == len(doc["traceEvents"])
+    bad = json.loads(json.dumps(doc))
+    bad["traceEvents"][-1]["ph"] = "Z"
+    with pytest.raises(ValueError):
+        validate_chrome_trace(bad)
+    bad2 = json.loads(json.dumps(doc))
+    del bad2["traceEvents"][-1]["ts"]
+    with pytest.raises(ValueError):
+        validate_chrome_trace(bad2)
+    with pytest.raises(ValueError):
+        validate_chrome_trace({"nope": []})
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_histogram_percentiles():
+    reg = MetricsRegistry()
+    h = reg.histogram("t.seconds")
+    for v in np.linspace(0.001, 1.0, 1000):
+        h.observe(float(v))
+    assert h.count == 1000
+    assert h.p50 == pytest.approx(0.5, rel=0.20)   # one log bucket (~19%)
+    assert h.p99 <= h.p999 <= 1.0
+    assert h.quantile(1.0) == 1.0
+    assert h.vmin == pytest.approx(0.001)
+    # underflow bucket: nonpositive values are counted, not crashed on
+    h.observe(0.0)
+    assert h.count == 1001
+
+
+def test_registry_snapshot_and_prometheus():
+    reg = MetricsRegistry()
+    reg.counter("noc.rounds", mode="sim").inc(5)
+    reg.gauge("noc.peak", mode="sim").set_max(3)
+    reg.gauge("noc.peak", mode="sim").set_max(2)   # max sticks
+    with reg.timer("step.seconds"):
+        pass
+    snap = reg.snapshot()
+    assert snap["counters"]["noc.rounds{mode=sim}"] == 5
+    assert snap["gauges"]["noc.peak{mode=sim}"] == 3
+    assert snap["histograms"]["step.seconds"]["count"] == 1
+    assert "p99.9" in snap["histograms"]["step.seconds"]
+    txt = reg.prometheus()
+    assert "noc_rounds" in txt and 'mode="sim"' in txt
+    assert 'quantile="0.999"' in txt
+    with pytest.raises(ValueError):
+        reg.counter("noc.rounds", mode="sim").inc(-1)
+
+
+def test_engine_publishes_into_registry():
+    reg = enable_metrics()
+    try:
+        stats = _run_bmvm("mesh", "sim", None, None)
+        snap = reg.snapshot()
+        key = "noc.rounds{mode=sim,topology=Mesh2D}"
+        assert snap["counters"][key] == stats.rounds
+        assert snap["counters"][
+            "noc.link_bytes{mode=sim,topology=Mesh2D}"] == stats.link_bytes
+    finally:
+        disable_metrics()
+    assert get_registry() is None
+
+
+def test_moe_shares_naming_scheme():
+    from repro.models.moe import MoEDispatchStats
+
+    # the per-step metric names are a subset of the dispatch-stat names:
+    # one schema, two publishers
+    assert set(STEP_METRIC_NAMES.values()) <= set(MOE_METRIC_NAMES.values())
+    reg = enable_metrics()
+    try:
+        st = MoEDispatchStats(engine="noc", topology="fattree", fallback=None,
+                              capacity=8, capacity_factor=1.5, flits=64,
+                              rounds=12, link_bytes=4096, drops=3,
+                              peak_occupancy=7)
+        st.publish()
+        snap = reg.snapshot()
+        assert snap["counters"]["noc.moe.drops{engine=noc,topology=fattree}"] == 3
+        assert snap["gauges"][
+            "noc.moe.peak_occupancy{engine=noc,topology=fattree}"] == 7
+        # the train loop's step-metric dict lands on the same names
+        reg.record_step_metrics({"moe_drops": 2, "moe_peak_occupancy": 9,
+                                 "loss": 1.0})
+        snap = reg.snapshot()
+        assert snap["counters"]["noc.moe.drops"] == 2
+        assert snap["gauges"]["noc.moe.peak_occupancy"] == 9
+    finally:
+        disable_metrics()
+
+
+def test_publish_noop_when_disabled():
+    from repro.models.moe import MoEDispatchStats
+
+    disable_metrics()
+    st = MoEDispatchStats(engine="noc", topology=None, fallback=None,
+                          capacity=1, capacity_factor=1.0, flits=0, rounds=0,
+                          link_bytes=0)
+    st.publish()   # must not raise
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("app", ["bmvm", "ldpc", "pf"])
+def test_cli_emits_valid_perfetto(app, tmp_path):
+    out = tmp_path / f"{app}.json"
+    repo = Path(__file__).parent.parent
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(repo / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.telemetry", "--app", app,
+         "--iters", "2", "--out", str(out)],
+        capture_output=True, text=True, env=env, cwd=repo, timeout=600)
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "parity OK (bit-exact)" in res.stdout
+    doc = json.loads(out.read_text())
+    assert validate_chrome_trace(doc) > 0
