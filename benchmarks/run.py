@@ -718,6 +718,120 @@ def table11_observability(fast: bool) -> list[str]:
     return rows
 
 
+def table12_profile(fast: bool) -> list[str]:
+    """Latency-profiler gates (`repro.telemetry.profile` + `regress`):
+
+      * decomposition — per-packet/per-message components sum bit-exactly
+        to measured inject→eject latency across sim / buffered / bridged
+        BMVM runs, and the critical-path length equals the final logical
+        clock (the per-flow p50/p99 and above-bound gap are committed as
+        deterministic counters in ``BENCH_table12.json``);
+      * identity — an uncontended single packet meets
+        ``latency == critical path == switch_lower_bound`` exactly;
+      * zero overhead — an unprofiled run allocates no LatencyRecords (and
+        still no TraceEvents), extending the `events_allocated` gate;
+      * regress self-test — `telemetry.regress.compare_rows` passes on
+        identical rows and trips (named metric) on an injected slowdown
+        (``switch_buffer_depth=1`` vs the default 4)."""
+    from repro.apps import bmvm
+    from repro.core import NoCConfig, NoCExecutor, cut, make_topology
+    from repro.core.partition import resolve_placement
+    from repro.core.switch import (Packet, SwitchConfig, simulate_switch,
+                                   switch_lower_bound)
+    from repro.kernels import ref as kref
+    from repro.telemetry import (Tracer, events_allocated, profile_trace,
+                                 records_allocated)
+    from repro.telemetry.regress import compare_rows
+
+    rng = np.random.default_rng(12)
+    cfg = bmvm.BMVMConfig(n=64, k=8, fold=2)
+    A = rng.integers(0, 2, (64, 64)).astype(np.uint8)
+    v = rng.integers(0, 2, (64,)).astype(np.uint8)
+    lut = np.asarray(bmvm.preprocess(A, cfg))
+    g, feedback = bmvm.build_bmvm_graph(lut, cfg)
+    vw = np.asarray(kref.gf2_pack_vector(jnp.asarray(v), cfg.k), np.uint32)
+    f = cfg.fold
+    inputs = {f"lut{i}.v": vw[i * f:(i + 1) * f] for i in range(cfg.n_pe)}
+    n = 2 * cfg.n_pe
+    topo = make_topology("mesh", n)
+    r = 2 if fast else 5
+    rows = []
+
+    def run_profiled(mode, pods=None, noc_cfg=None):
+        tr = Tracer()
+        plan = None
+        place = None
+        if pods is not None:
+            place = resolve_placement(g, topo, pod_of_node=pods)
+            plan = cut(g, place, pods)
+        ex = NoCExecutor(g, topo, placement=place, plan=plan, cfg=noc_cfg,
+                         trace=tr)
+        t0 = time.monotonic()
+        ex.run_iterative(inputs, feedback, r, mode=mode)
+        dt = (time.monotonic() - t0) * 1e6
+        prof = profile_trace(tr).check_exact()
+        cp = prof.critical_path()
+        assert cp.length == tr.clock, (cp.length, tr.clock)
+        return prof, cp, dt
+
+    # gate 1: exact decomposition + critical path across the transports
+    pods = [0] * (n // 2) + [1] * (n - n // 2)
+    for tag, mode, p in (("sim", "sim", None), ("buffered", "buffered", None),
+                         ("bridged", "sim", pods)):
+        prof, cp, dt = run_profiled(mode, pods=p)
+        lats = sorted(l for rec in prof.records
+                      for l in [rec.latency] * rec.n)
+        p50 = lats[max(0, -(-50 * len(lats) // 100) - 1)]
+        p99 = lats[max(0, -(-99 * len(lats) // 100) - 1)]
+        rows.append(
+            f"table12_bmvm_{tag},{dt:.0f},records={sum(x.n for x in prof.records)} "
+            f"waves={len(prof.waves)} p50={p50} p99={p99} "
+            f"crit={cp.length} gap={cp.gap} exact=True")
+    # gate 2: uncontended single packet meets the analytic bound exactly
+    scfg = SwitchConfig()
+    tr = Tracer()
+    res = simulate_switch(topo, [Packet(0, n - 1, 4, t_inject=0)], scfg,
+                          tracer=tr)
+    prof = profile_trace(tr).check_exact()
+    rec, cp = prof.records[0], prof.critical_path()
+    bound = switch_lower_bound(topo, [Packet(0, n - 1, 4, t_inject=0)], scfg)
+    assert rec.latency == cp.length == bound == res.stats.cycles, (
+        rec.latency, cp.length, bound, res.stats.cycles)
+    assert rec.queueing == 0 and rec.bridge == 0
+    rows.append(f"table12_single_packet,0,lat={rec.latency} crit={cp.length} "
+                f"bound={bound} queueing=0 identity=True")
+    # gate 3: profiling off allocates nothing (records AND events)
+    ex_off = NoCExecutor(g, topo)
+    ex_off.run_iterative(inputs, feedback, 1, mode="buffered")
+    ev0, rec0 = events_allocated(), records_allocated()
+    ex_off.run_iterative(inputs, feedback, r, mode="buffered")
+    assert events_allocated() == ev0, "unprofiled run allocated TraceEvents"
+    assert records_allocated() == rec0, "unprofiled run allocated LatencyRecords"
+    rows.append("table12_zero_overhead,0,records_delta=0 events_delta=0 "
+                "gate=True")
+    # gate 4: the regression diff trips on an injected slowdown and only then
+    def counter_row(noc_cfg):
+        tr = Tracer()
+        ex = NoCExecutor(g, topo, cfg=noc_cfg, trace=tr)
+        _, st = ex.run_iterative(inputs, feedback, r, mode="buffered")
+        prof = profile_trace(tr).check_exact()
+        return {"name": "selftest_buffered", "us": 0.0,
+                "cycles": st.switch_cycles, "stalls": st.switch_stall_cycles,
+                "crit": prof.critical_path().length}
+
+    base_row = counter_row(None)
+    clean = compare_rows([base_row], [counter_row(None)])
+    assert not clean, f"identical runs produced findings: {clean}"
+    slow = compare_rows([base_row],
+                        [counter_row(NoCConfig(switch_buffer_depth=1))])
+    tripped = [fi for fi in slow if fi["verdict"] == "regression"]
+    assert tripped, "injected slowdown (buffer_depth=1) did not trip the gate"
+    rows.append(f"table12_regress_selftest,0,clean_findings={len(clean)} "
+                f"tripped=True metric={tripped[0]['metric']} "
+                f"delta={tripped[0]['delta']}")
+    return rows
+
+
 def placement_search(fast: bool) -> list[str]:
     """Annealing placement search vs round-robin/greedy on the app graphs."""
     from repro.apps import bmvm, ldpc
@@ -831,6 +945,7 @@ TABLES = {
     "table9_congestion": table9_congestion,
     "table10_verify": table10_verify,
     "table11_observability": table11_observability,
+    "table12_profile": table12_profile,
     "placement_search": placement_search,
     "fig_ldpc": fig_ldpc,
     "fig_pf": fig_pf,
@@ -843,6 +958,7 @@ TABLES = {
 SNAPSHOTS = {
     "table4_bmvm_iter": "BENCH_table4.json",
     "table9_congestion": "BENCH_table9.json",
+    "table12_profile": "BENCH_table12.json",
 }
 
 
@@ -917,7 +1033,15 @@ def main() -> None:
     ap.add_argument("--snapshot", action="store_true",
                     help="write benchmarks/BENCH_<table>.json for tables "
                          "with a tracked perf trajectory")
-    args = ap.parse_args()
+    ap.add_argument("--compare", action="store_true",
+                    help="instead of running tables, diff fresh runs "
+                         "against the committed BENCH_*.json baselines "
+                         "(delegates to repro.telemetry.regress)")
+    args, extra = ap.parse_known_args()
+    if args.compare:
+        from repro.telemetry.regress import main as regress_main
+
+        raise SystemExit(regress_main(extra))
     print("name,us_per_call,derived")
     for name, fn in TABLES.items():
         if args.only and args.only != name:

@@ -277,7 +277,7 @@ class _BridgeSim:
         lk["occ"] = max(0, lk["occ"] - self.cfg.serdes.lanes)
 
     def end_round(self) -> None:
-        round_stall = 0
+        round_stall, gating = 0, -1
         for idx, lk in enumerate(self.links):
             self._admit_transmit(idx, lk)
             s = 0
@@ -285,28 +285,37 @@ class _BridgeSim:
                 self._admit_transmit(idx, lk)
                 s += 1
             lk["stalls"] += s
-            round_stall = max(round_stall, s)
+            if s > round_stall:
+                round_stall, gating = s, idx
         self.stall_rounds += round_stall
         if self.tracer is not None and round_stall:
+            # the slowest bridge gates the synchronous schedule: naming it in
+            # the event is what lets the profiler charge the stall to a
+            # concrete resource instead of "the bridges"
+            bs, bd = self.keys[gating]
             self.tracer.instant("bridge_stall", "bridges",
-                                ts=self._t0 + self._round, rounds=round_stall)
+                                ts=self._t0 + self._round, rounds=round_stall,
+                                src=bs, dst=bd)
         self._round += 1
 
     def finish(self) -> BridgeStats:
         lanes = self.cfg.serdes.lanes
         beat_b = self.cfg.serdes.beat_bytes
-        drain = 0
+        drain, gating = 0, -1
         for idx, lk in enumerate(self.links):
             s = -(-lk["occ"] // lanes)
             lk["stalls"] += s
             while self.tracer is not None and lk["occ"] > 0:
                 self._admit_transmit(idx, lk)   # traced terminal drain
             lk["occ"] = 0
-            drain = max(drain, s)
+            if s > drain:
+                drain, gating = s, idx
         self.stall_rounds += drain
         if self.tracer is not None and drain:
+            bs, bd = self.keys[gating]
             self.tracer.instant("bridge_stall", "bridges",
-                                ts=self._t0 + self._round, rounds=drain)
+                                ts=self._t0 + self._round, rounds=drain,
+                                src=bs, dst=bd)
         per = {k: dict(beats=lk["beats"], wire_bytes=lk["words"] * beat_b,
                        stall_rounds=lk["stalls"], peak_fifo=lk["peak"])
                for k, lk in zip(self.keys, self.links)}

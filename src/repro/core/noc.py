@@ -158,7 +158,13 @@ The contract, differential-tested across the topology × app × mode grid:
 **bit-exactly** — the trace is a proof-carrying account of the run, not a
 best-effort log.  With ``trace=None`` (the default) no event object is
 allocated anywhere (every hook is one ``is not None`` check;
-property-tested), so tracing costs nothing when off.  Exporters:
+property-tested), so tracing costs nothing when off.  On top of the raw
+events, `repro.telemetry.profile.profile_trace` rebuilds per-packet /
+per-message latency records (inject→eject, decomposed exactly into
+serialization + hop + queueing + bridge-stall) and attributes every tick
+above the analytic bounds to a named resource — see ``docs/observability.md``
+for the full telemetry contract, the ``noc.latency.*`` metrics schema and
+how to read the bottleneck report.  Exporters:
 `repro.telemetry.chrome_trace` (Perfetto/Chrome timeline — one track per
 router/link/bridge, counter tracks for queue depth and link load),
 `repro.telemetry.heatmap` (text/CSV link utilization, also via
@@ -391,6 +397,7 @@ class NoCExecutor:
         for c in graph.channels:
             self._chan_by_src[c.src_pe].append(c)
         self.programs: list[_WaveProgram] = [self._compile_wave(w) for w in self.waves]
+        self._hop_cache: dict[tuple[int, int], int] = {}   # (src, dst) -> hops
         # jit caches for PE firing (sim/batch modes), keyed by id(pe.fn);
         # fall back to eager per distinct body
         self._jit_fns: dict[int, Any] = {}
@@ -596,6 +603,18 @@ class NoCExecutor:
                 route_program_stats(prog, msgs_arr.nbytes), bstats)
 
     # -- telemetry -----------------------------------------------------------
+    def _hops(self, s: int, d: int) -> int:
+        """Topology hop distance ``s -> d`` under dimension-ordered routing —
+        the per-message ``hops`` attribution the latency profiler charges as
+        the in-flight component (cached; identical for every transport)."""
+        h = self._hop_cache.get((s, d))
+        if h is None:
+            from .switch import dor_route
+
+            h = len(dor_route(self.topo, s, d, max(2, self.cfg.switch_vcs))[0]) - 1
+            self._hop_cache[(s, d)] = h
+        return h
+
     def _trace_msgs(self, tr, prog: _WaveProgram, scale: int, t0: int) -> None:
         """One ``msg`` event per compiled slot — the event-level mirror of
         ``prog.static`` (payload/flit/cross-pod counters, scaled by the batch
@@ -605,7 +624,8 @@ class NoCExecutor:
         for slot in prog.slots:
             s, d = self.placement[slot.src_pe], self.placement[slot.dst_pe]
             args = dict(src=s, dst=d, bytes=slot.nbytes,
-                        flits=cfg.flits_for(slot.nbytes), n=scale)
+                        flits=cfg.flits_for(slot.nbytes), n=scale,
+                        hops=self._hops(s, d))
             if pod_of is not None and pod_of[s] != pod_of[d]:
                 args["wire_bytes"] = qserdes.link_bytes_on_wire(
                     slot.shape, slot.dtype, cfg.serdes)
@@ -872,7 +892,8 @@ class NoCExecutor:
                 margs = None
                 if tr is not None:
                     margs = dict(src=s, dst=d, bytes=val.nbytes,
-                                 flits=cfg.flits_for(val.nbytes), n=1)
+                                 flits=cfg.flits_for(val.nbytes), n=1,
+                                 hops=self._hops(s, d))
                 if pod_of is not None and pod_of[s] != pod_of[d]:
                     wb = qserdes.link_bytes_on_wire(val.shape, val.dtype,
                                                     cfg.serdes)

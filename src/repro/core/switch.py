@@ -225,8 +225,14 @@ def simulate_switch(topo: Topology, packets: Sequence[Packet],
     deltas, ejections) plus ``queue`` occupancy counters, ``idle_ff``
     fast-forward markers and a ``deadlock`` instant before the error is
     raised; ``tracer.detail == "flits"`` adds one event per flit move.
-    Timestamps are ``tracer.clock + cycle``, so the caller positions the run
-    on its timeline.  ``tracer=None`` adds no work to the loop."""
+    For attribution (`repro.telemetry.profile`) a traced run additionally
+    emits one ``switch_run`` instant up front (packet/flit totals plus the
+    analytic `switch_lower_bound`), one ``pkt`` instant per delivered packet
+    at tail ejection (inject cycle, latency, hops, per-packet credit-stall
+    and arbitration-loss counts) and per-link ``link`` byte counters at the
+    end of the run.  Timestamps are ``tracer.clock + cycle``, so the caller
+    positions the run on its timeline.  ``tracer=None`` adds no work to the
+    loop."""
     cfg = cfg or SwitchConfig()
     n = topo.n_nodes
     depth = cfg.buffer_depth
@@ -245,6 +251,7 @@ def simulate_switch(topo: Topology, packets: Sequence[Packet],
     # -- static per-packet tables ------------------------------------------
     P = len(packets)
     nxt: list[dict[int, tuple[int, int]]] = []   # node -> (out_key, down_vc)
+    hops_of: list[int] = []
     pay_src: list[Optional[np.ndarray]] = []
     out_pay: list[Optional[np.ndarray]] = []
     for p in packets:
@@ -252,6 +259,7 @@ def simulate_switch(topo: Topology, packets: Sequence[Packet],
             raise ValueError(f"packet {p.src}->{p.dst}: n_flits must be >= 1")
         route, vcs = dor_route(topo, p.src, p.dst, cfg.n_vcs)
         hops = len(route) - 1
+        hops_of.append(hops)
         tab = {route[i]: (route[i + 1], vcs[i]) if i < hops else (EJECT, 0)
                for i in range(hops + 1)}
         nxt.append(tab)
@@ -288,6 +296,18 @@ def simulate_switch(topo: Topology, packets: Sequence[Packet],
     stats = SwitchStats()
     base = tracer.clock if tracer is not None else 0
     flit_detail = tracer is not None and tracer.detail == "flits"
+    # per-packet attribution state (traced runs only — the untraced loop
+    # must stay allocation-free): credit/VC stall cycles and arbitration
+    # losses charged to the packet at the head of the blocked FIFO, plus the
+    # per-link flit tallies the heatmap / hot-link attribution read
+    pkt_stall: Optional[list] = None
+    pkt_arb: Optional[list] = None
+    link_tally: Optional[dict] = None
+    if tracer is not None and P:
+        pkt_stall, pkt_arb, link_tally = [0] * P, [0] * P, {}
+        tracer.instant("switch_run", "switch", ts=base, packets=P,
+                       flits=sum(p.n_flits for p in packets),
+                       bound=switch_lower_bound(topo, packets, cfg))
     t_stall0 = t_arb0 = t_ej0 = cyc_q = 0
     completions = np.full(P, -1, np.int64)
     ejected = np.zeros(P, np.int64)      # flits ejected so far, per packet
@@ -335,12 +355,20 @@ def simulate_switch(topo: Topology, packets: Sequence[Packet],
         for (u, okey), cands in sorted(reqs.items()):
             elig = [cand for cand in cands if cand[6]]
             stats.stall_cycles += len(cands) - len(elig)
+            if pkt_stall is not None:
+                for cand in cands:
+                    if not cand[6]:
+                        pkt_stall[cand[3]] += 1
             if not elig:
                 continue
             ptr = rr.get((u, okey), 0)
             L = len(rings[u])
             win = min(elig, key=lambda cand: (cand[0] - ptr) % L)
             stats.arb_losses += len(elig) - 1
+            if pkt_arb is not None:
+                for cand in elig:
+                    if cand is not win:
+                        pkt_arb[cand[3]] += 1
             rr[(u, okey)] = (win[0] + 1) % L
             moves.append((u, okey, win))
         # ---- apply (grants were computed on start-of-cycle state) ---------
@@ -372,6 +400,12 @@ def simulate_switch(topo: Topology, packets: Sequence[Packet],
                     stats.latency_sum += lat
                     stats.latency_max = max(stats.latency_max, lat)
                     completions[pid] = c + 1
+                    if tracer is not None:
+                        tracer.instant(
+                            "pkt", f"node {pkt.dst}", ts=base + c, pid=pid,
+                            src=pkt.src, dst=pkt.dst, flits=pkt.n_flits,
+                            hops=hops_of[pid], inject=pkt.t_inject, lat=lat,
+                            stall=pkt_stall[pid], arb=pkt_arb[pid])
             else:
                 dkey = (okey, u, dvc)
                 dq = fifos.setdefault(dkey, deque())
@@ -382,6 +416,7 @@ def simulate_switch(topo: Topology, packets: Sequence[Packet],
                 stats.link_flits += 1
                 stats.max_queue = max(stats.max_queue, len(dq))
                 if tracer is not None:
+                    link_tally[(u, okey)] = link_tally.get((u, okey), 0) + 1
                     if len(dq) > cyc_q:
                         cyc_q = len(dq)
                     if flit_detail:
@@ -436,6 +471,13 @@ def simulate_switch(topo: Topology, packets: Sequence[Packet],
                 tracer.counter("queue", "switch queue", cyc_q, ts=base + c)
         c += 1
     stats.cycles = c
+    if link_tally:
+        # end-of-run per-link totals: what the heatmap and the profiler's
+        # hot-link attribution read for buffered runs (schedule transports
+        # emit these per round; here one counter per traversed link)
+        ts_end = base + max(c - 1, 0)
+        for (u, v), flits in sorted(link_tally.items()):
+            tracer.counter("link", f"link {u}->{v}", flits * fb, ts=ts_end)
     assert int(ejected.sum()) == sum(p.n_flits for p in packets)
     return SwitchResult(stats, completions, out_pay, ej_log)
 

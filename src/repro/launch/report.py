@@ -2,10 +2,16 @@
 
     PYTHONPATH=src python -m repro.launch.report results/dryrun [--md]
     PYTHONPATH=src python -m repro.launch.report --trace trace.json [--csv]
+    PYTHONPATH=src python -m repro.launch.report --profile trace.json
 
 ``--trace`` renders the link-utilization heatmap of a recorded Perfetto/
 Chrome trace (see ``python -m repro.telemetry``) instead of the roofline
 table — the NoC-side communication report next to the TPU-side one.
+``--profile`` runs the latency profiler over the same saved trace
+(``repro.telemetry.events_from_chrome`` → ``profile_trace``) and prints
+the bottleneck report: exact per-packet latency decomposition, critical
+path and the gap attribution against the analytic bounds (see
+``docs/observability.md``).
 
 Adds the algorithm-ideal terms the raw records can't know:
   ideal_compute_s = MODEL_FLOPS/chips / peak
@@ -83,7 +89,16 @@ def main():
                          "telemetry trace instead of the roofline table")
     ap.add_argument("--csv", action="store_true",
                     help="with --trace: CSV rows instead of the matrix")
+    ap.add_argument("--profile", default=None, metavar="TRACE_JSON",
+                    help="print the latency profiler's bottleneck report "
+                         "for a saved telemetry trace")
     args = ap.parse_args()
+    if args.profile is not None:
+        from ..telemetry import events_from_chrome, profile_trace
+        with open(args.profile) as fh:
+            doc = json.load(fh)
+        print(profile_trace(events_from_chrome(doc)).check_exact().report())
+        return
     if args.trace is not None:
         from ..telemetry import heatmap, link_utilization
         with open(args.trace) as fh:

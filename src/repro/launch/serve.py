@@ -106,6 +106,11 @@ def run(argv=None):
         d = reg.histogram("serve.decode.seconds")
         print(f"decode/token: p50 {d.p50 * 1e3:.1f}ms  "
               f"p99 {d.p99 * 1e3:.1f}ms  p99.9 {d.p999 * 1e3:.1f}ms")
+        # any NoC engine profiled in-process publishes noc.latency.*;
+        # surface it next to the serve latencies (logical-clock ticks)
+        for key, h in reg.histograms("noc.latency.").items():
+            print(f"{key}: n={h.count} p50 {h.p50:.0f}  p99 {h.p99:.0f}  "
+                  f"p99.9 {h.p999:.0f} ticks")
         snap = _json.dumps(reg.snapshot(), indent=1, sort_keys=True)
         if args.metrics == "-":
             print(snap)

@@ -138,6 +138,11 @@ def run(argv=None):
         h = reg.histogram("train.step.seconds")
         print(f"step time: p50 {h.p50 * 1e3:.1f}ms  p99 {h.p99 * 1e3:.1f}ms  "
               f"p99.9 {h.p999 * 1e3:.1f}ms")
+        # any NoC engine profiled in-process publishes noc.latency.*;
+        # surface it next to the step times (logical-clock ticks)
+        for key, hh in reg.histograms("noc.latency.").items():
+            print(f"{key}: n={hh.count} p50 {hh.p50:.0f}  p99 {hh.p99:.0f}  "
+                  f"p99.9 {hh.p999:.0f} ticks")
         snap = _json.dumps(reg.snapshot(), indent=1, sort_keys=True)
         if args.metrics == "-":
             print(snap)

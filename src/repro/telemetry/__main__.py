@@ -8,6 +8,12 @@ link-utilization report.
     python -m repro.telemetry --app bmvm --topology mesh --out trace.json
     python -m repro.telemetry --app ldpc --topology torus --mode buffered
     python -m repro.telemetry --app pf --pods --csv
+    python -m repro.telemetry --app bmvm --mode buffered --profile
+
+``--profile`` additionally runs the latency profiler (exact per-packet
+decomposition + critical path + gap attribution; `repro.telemetry.profile`)
+and prints the bottleneck report; with ``--metrics`` the per-flow
+``noc.latency.*`` histograms land in the snapshot too.
 """
 from __future__ import annotations
 
@@ -76,11 +82,15 @@ def main(argv=None) -> None:
                     help="emit the link report as CSV instead of a matrix")
     ap.add_argument("--metrics", default=None,
                     help="enable the metrics registry; write snapshot here")
+    ap.add_argument("--profile", action="store_true",
+                    help="print the latency profiler's bottleneck report "
+                         "(and publish noc.latency.* when --metrics)")
     args = ap.parse_args(argv)
 
     from .export import (chrome_trace, heatmap, link_utilization,
                          write_chrome_trace)
     from .metrics import disable_metrics, enable_metrics
+    from .profile import profile_trace
     from .tracer import Tracer, trace_stats
 
     reg = enable_metrics() if args.metrics else None
@@ -106,6 +116,13 @@ def main(argv=None) -> None:
               f"events; load in ui.perfetto.dev)")
     print()
     print(heatmap(link_utilization(tr), csv=args.csv))
+    if args.profile:
+        prof = profile_trace(tr).check_exact()
+        if reg is not None:
+            prof.publish(reg, app=args.app, topology=args.topology,
+                         mode=args.mode)
+        print()
+        print(prof.report())
     if reg is not None:
         with open(args.metrics, "w") as fh:
             json.dump(reg.snapshot(), fh, indent=1, sort_keys=True)

@@ -127,6 +127,40 @@ def validate_chrome_trace(doc: dict) -> int:
     return len(evs)
 
 
+def events_from_chrome(doc: dict) -> list:
+    """Inverse of :func:`chrome_trace`: rebuild `TraceEvent`s from a saved
+    Chrome trace document.
+
+    Track names are recovered from the ``thread_name`` metadata, spans
+    (``ph=X``) back to kind ``"span"`` with their duration, counters
+    (``ph=C``) to kind ``"counter"`` with ``args.value``, instants to kind
+    ``"instant"`` with their args; metadata events are dropped.  The result
+    feeds `repro.telemetry.profile.profile_trace` (and `trace_stats`), so a
+    trace written to disk round-trips into the same profile the live tracer
+    would give — ``launch/report.py --profile`` is exactly this path.
+    """
+    names = {(ev["pid"], ev["tid"]): ev["args"]["name"]
+             for ev in doc.get("traceEvents", ())
+             if ev.get("ph") == "M" and ev.get("name") == "thread_name"}
+    out = []
+    for ev in doc.get("traceEvents", ()):
+        ph = ev.get("ph")
+        if ph == "M":
+            continue
+        track = names.get((ev.get("pid"), ev.get("tid")), "")
+        if ph == "X":
+            out.append(TraceEvent(int(ev["ts"]), ev["name"], track, "span",
+                                  dur=int(ev["dur"]),
+                                  args=ev.get("args") or None))
+        elif ph == "C":
+            out.append(TraceEvent(int(ev["ts"]), ev["name"], track,
+                                  "counter", value=ev["args"]["value"]))
+        else:
+            out.append(TraceEvent(int(ev["ts"]), ev["name"], track,
+                                  "instant", args=ev.get("args") or None))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # link-utilization heatmap
 # ---------------------------------------------------------------------------
@@ -137,7 +171,10 @@ def link_utilization(trace: Union[Tracer, list, dict]) -> dict:
     Accepts a live tracer / event list (sums ``link`` counter events) or an
     exported Chrome trace document (recovers the link from the track's
     ``thread_name`` metadata).  Bridge wire traffic is included under its
-    own ``(src, dst)`` pairs via the ``bridge_tx`` events.
+    own ``(src, dst)`` pairs via the ``bridge_tx`` events, so a partitioned
+    run's serial links show up next to the router links they bridge; the
+    buffered switch emits per-link flit-byte counters at the end of each
+    run, so ``mode="buffered"`` heatmaps are populated too.
     """
     util: dict = {}
 

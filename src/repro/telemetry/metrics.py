@@ -113,6 +113,19 @@ class Histogram:
         self.buckets[idx] = self.buckets.get(idx, 0) + 1
 
     def quantile(self, q: float) -> float:
+        """Quantile estimate, exact to one bucket (~19% relative).
+
+        Contract (tested in ``tests/test_telemetry.py``):
+
+        * empty histogram → ``0.0`` for every ``q`` (never divides by zero);
+        * single observation / single bucket → that value for every ``q``
+          (the bucket edge is clamped to the observed ``[vmin, vmax]``, so
+          p50 == p99 == p99.9 == the value);
+        * ``q`` outside ``[0, 1]`` raises ``ValueError``;
+        * ``q == 0`` reads the lowest occupied bucket (rank 1).
+        """
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile q must be in [0, 1], got {q!r}")
         if not self.count:
             return 0.0
         target = max(1, math.ceil(q * self.count))
@@ -171,6 +184,13 @@ class MetricsRegistry:
         if h is None:
             h = self._histograms[k] = Histogram(name, labels)
         return h
+
+    def histograms(self, prefix: str = "") -> dict:
+        """Installed histograms whose name starts with ``prefix``, keyed by
+        their full ``name{labels}`` key (sorted).  Read-only view used by the
+        launch entrypoints to surface e.g. every ``noc.latency.*`` series."""
+        return {k: h for k, h in sorted(self._histograms.items())
+                if h.name.startswith(prefix)}
 
     @contextlib.contextmanager
     def timer(self, name: str, **labels):

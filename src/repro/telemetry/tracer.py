@@ -11,19 +11,26 @@ wave           span     "noc"                wave, msgs; dur = scatter+route+gat
 scatter        span     "engine"             msgs, bytes
 route          span     "engine"             mode
 gather         span     "engine"             —
-msg            instant  "node {src}"         src, dst, bytes, flits, n
+msg            instant  "node {src}"         src, dst, bytes, flits, hops, n
                                              [+ wire_bytes, beats when cross-pod]
 round          instant  "noc"                bytes, links (one per schedule round)
-link           counter  "link {s}->{d}"      value = bytes this round
+link           counter  "link {s}->{d}"      value = bytes this round (schedule
+                                             modes) or flit-bytes this switch
+                                             run (buffered mode, one per link)
 cycle          instant  "switch"             c, moves, bytes, stalls, arb, ejects
 queue          counter  "switch queue"       value = peak FIFO occupancy, cycle
 flit           instant  "router {u}"         pid, f, vc, to (detail="flits" only)
+switch_run     instant  "switch"             packets, flits, bound (analytic
+                                             switch_lower_bound for the run)
+pkt            instant  "node {dst}"         pid, src, dst, flits, hops, inject,
+                                             lat, stall, arb (one per packet,
+                                             emitted at tail ejection)
 idle_ff        instant  "switch"             to (cycle-counter fast-forward)
 deadlock       instant  "switch"             wedged, wait_cycle
 bridge_cfg     instant  "bridges"            n, wire_bits, lanes, beat_bytes, ...
 bridge_tx      instant  "bridge {s}->{d}"    words, beats, wire_bytes
 bridge_fifo    counter  "bridge {s}->{d}"    value = FIFO occupancy, wire words
-bridge_stall   instant  "bridges"            rounds
+bridge_stall   instant  "bridges"            rounds, src, dst (the gating bridge)
 =============  =======  ===================  ======================================
 
 Timestamps are *logical* NoC time: each wave occupies ``[t0, t0 + dur)``
@@ -43,6 +50,11 @@ parity is differential-tested across the topology × app × mode grid in
 The buffer is bounded (``capacity`` events, oldest dropped first) so tracing
 can never blow up memory on a runaway workload; :func:`trace_stats` refuses
 to aggregate a trace that dropped events (a partial trace proves nothing).
+
+:mod:`repro.telemetry.profile` consumes the same stream and rebuilds
+per-packet/per-message latency records with an exact component decomposition
+and per-wave gap attribution; ``docs/observability.md`` documents the whole
+contract end to end.
 """
 from __future__ import annotations
 

@@ -145,8 +145,11 @@ def test_tracing_disabled_allocates_nothing():
 
 
 def test_tracing_disabled_timing_stable():
-    """The off path is one pointer check per hook: two untraced runs of the
-    table4 iteration agree to 3% (min-of-4, amortized over 10 iters)."""
+    """The off path is one pointer check per hook — this is a *stability
+    canary* (two untraced runs agree), not the overhead gate (that is
+    ``table11_observability``'s traced_over_untraced ratio).  Wall clock on
+    a shared CI host swings, so the threshold is noise-aware: min-of-6 with
+    15% relative + 1ms absolute slack."""
     ex, inputs, feedback = _bmvm_executor()
     ex.run_iterative(inputs, feedback, 2, mode="sim")   # warmup/compile
 
@@ -155,9 +158,9 @@ def test_tracing_disabled_timing_stable():
         ex.run_iterative(inputs, feedback, 10, mode="sim")
         return time.perf_counter() - t0
 
-    a = min(once() for _ in range(4))
-    b = min(once() for _ in range(4))
-    assert abs(a - b) <= 0.03 * max(a, b) + 1e-4
+    a = min(once() for _ in range(6))
+    b = min(once() for _ in range(6))
+    assert abs(a - b) <= 0.15 * max(a, b) + 1e-3
 
 
 def test_tracer_true_constructs_fresh():
@@ -190,6 +193,35 @@ def test_tracer_rejects_bad_args():
         Tracer(capacity=0)
     with pytest.raises(ValueError):
         Tracer(detail="everything")
+
+
+@pytest.mark.parametrize("variant", ["buffered", "bridged",
+                                     "buffered_bridged"])
+def test_overflow_strict_refuses_engines(variant):
+    """Ring-buffer overflow on the real engines (not just synthetic events):
+    strict aggregation refuses loudly, ``strict=False`` degrades predictably
+    — it returns counters folded from the surviving suffix, which can only
+    undercount flow totals, never invent traffic."""
+    emode = "sim" if variant == "bridged" else "buffered"
+    pods = None if variant == "buffered" else _pods(16)
+    tr = Tracer(capacity=24)
+    stats = _run_ldpc("mesh", emode, pods, tr)
+    assert tr.dropped > 0, "capacity=24 did not overflow: test is vacuous"
+    assert len(tr) == 24
+    with pytest.raises(ValueError, match="dropped"):
+        trace_stats(tr)
+    partial = trace_stats(tr, strict=False)
+    # predictable degradation: what survives never exceeds the true totals
+    assert partial.payload_bytes <= stats.payload_bytes
+    assert partial.flits <= stats.flits
+    assert partial.link_bytes <= stats.link_bytes
+    assert partial.switch_max_queue <= stats.switch_max_queue
+    assert partial.bridge_wire_bytes <= stats.bridge_wire_bytes
+    # a complete trace of the same run still reproduces stats bit-exactly
+    tr_full = Tracer()
+    stats_full = _run_ldpc("mesh", emode, pods, tr_full)
+    assert tr_full.dropped == 0
+    assert trace_stats(tr_full).as_dict() == stats_full.as_dict()
 
 
 # ---------------------------------------------------------------------------
@@ -259,6 +291,38 @@ def test_chrome_trace_schema_roundtrip(tmp_path):
     assert sum(int(r.split(",")[2]) for r in rows[1:]) == stats.link_bytes
 
 
+@pytest.mark.parametrize("mode", ["sim", "buffered"])
+def test_heatmap_includes_bridge_links(mode):
+    """A partitioned run's hottest resource can be a bridge: the heatmap
+    must show the serial links next to the router links — for the schedule
+    transport AND the buffered switch (which emits its own per-link
+    counters at the end of each run)."""
+    n = 16
+    pods = _pods(n)
+    tr = Tracer()
+    stats = _run_ldpc("mesh", mode, pods, tr)
+    assert stats.cross_pod_msgs > 0
+    assert stats.bridge_wire_bytes > 0
+    util = link_utilization(tr)
+    assert util, f"{mode} bridged run produced an empty heatmap"
+    # bridge endpoints can coincide with router links, so split by event
+    # kind: the bridge contribution is exactly the wire-byte counter
+    util_routers = link_utilization(
+        [ev for ev in tr.events() if ev.name != "bridge_tx"])
+    total = sum(util.values())
+    router_total = sum(util_routers.values())
+    assert total - router_total == stats.bridge_wire_bytes
+    # the router-link side is complete too (schedule rounds in sim, the
+    # switch's end-of-run per-link counters in buffered)
+    assert router_total == stats.link_bytes
+    # both resource kinds render in the same matrix and CSV
+    txt = heatmap(util)
+    assert "total bytes" in txt and str(total) in txt
+    csv_rows = heatmap(util, csv=True).splitlines()[1:]
+    assert len(csv_rows) == len(util)
+    assert sum(int(r.split(",")[2]) for r in csv_rows) == total
+
+
 def test_chrome_trace_tamper_rejected():
     tr = Tracer()
     tr.span("wave", "noc", 0, 2, wave=0)
@@ -293,6 +357,38 @@ def test_histogram_percentiles():
     # underflow bucket: nonpositive values are counted, not crashed on
     h.observe(0.0)
     assert h.count == 1001
+
+
+def test_histogram_empty_and_single_bucket_contract():
+    """The empty-histogram contract: every quantile is 0.0, no division by
+    zero anywhere; a single observation pins all quantiles to that value
+    (single-bucket p99.9 edge case); out-of-range q raises."""
+    reg = MetricsRegistry()
+    h = reg.histogram("empty.series")
+    for q in (0.0, 0.5, 0.99, 0.999, 1.0):
+        assert h.quantile(q) == 0.0
+    assert h.p50 == h.p99 == h.p999 == 0.0
+    assert h.mean == 0.0
+    # empty histograms snapshot/prometheus without crashing
+    snap = reg.snapshot()["histograms"]["empty.series"]
+    assert snap["count"] == 0 and snap["p99.9"] == 0.0
+    assert "empty_series" in reg.prometheus()
+    # single observation = single bucket: the clamp makes every quantile
+    # (including p99.9, whose rank rounds up to the only sample) exact
+    h.observe(7.3)
+    assert h.p50 == h.p99 == h.p999 == 7.3
+    assert h.quantile(0.0) == h.quantile(1.0) == 7.3
+    # underflow-only histogram: quantiles report the underflow edge (0.0),
+    # clamped inside the observed range; the true min stays on vmin
+    h0 = reg.histogram("underflow.series")
+    h0.observe(0.0)
+    h0.observe(-4.0)
+    assert h0.p50 == h0.p999 == 0.0
+    assert h0.vmin == -4.0 and h0.vmax == 0.0
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+    with pytest.raises(ValueError):
+        h.quantile(-0.1)
 
 
 def test_registry_snapshot_and_prometheus():
